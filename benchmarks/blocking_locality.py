@@ -1,0 +1,46 @@
+"""Paper Fig 1 analogue: naive vs GotoBLAS-blocked data movement.
+
+The paper measures L1 cache miss rate (23–36% naive → <5% ulmBLAS). The TPU
+analogue is HBM→VMEM traffic: a naive schedule re-streams whole operands per
+output tile, the blocked CAMP schedule streams each panel once per k-block
+pass. We report the modeled traffic ratio and the implied HBM-bound time.
+"""
+from __future__ import annotations
+
+from benchmarks.common import HBM_BW, csv_row
+from repro.core.blocking import choose_blocks
+
+SHAPES = [(512, 512, 512), (1024, 1024, 1024), (4096, 4096, 4096),
+          (12544, 64, 147), (196, 512, 4608)]   # + two ResNet/VGG layers
+
+
+def traffic(m, n, k, bm, bn, bk, a_bytes=1, b_bytes=1, out_bytes=4):
+    """HBM bytes for a (bm,bn,bk)-blocked GEMM (A re-read per n-panel, B
+    re-read per m-panel — the GotoBLAS trade)."""
+    n_panels_n = -(-n // bn)
+    n_panels_m = -(-m // bm)
+    a_traffic = m * k * a_bytes * n_panels_n
+    b_traffic = k * n * b_bytes * n_panels_m
+    return a_traffic + b_traffic + m * n * out_bytes
+
+
+def rows():
+    out = []
+    for (m, n, k) in SHAPES:
+        naive = traffic(m, n, k, 8, 8, k)            # tiny unblocked tiles
+        blk = choose_blocks(m, n, k)
+        blocked = traffic(m, n, k, blk.bm, blk.bn, blk.bk)
+        ideal = m * k + k * n + 4 * m * n            # every byte once
+        out.append(csv_row(
+            f"fig1_traffic_{m}x{n}x{k}",
+            blocked / HBM_BW * 1e6,
+            f"naive_bytes={naive:.3g};blocked_bytes={blocked:.3g};"
+            f"ideal={ideal:.3g};reduction={naive / blocked:.1f}x;"
+            f"blocked_vs_ideal={blocked / ideal:.2f}"))
+    out.append(csv_row("fig1_paper_claim", 0.0,
+                       "naive_L1_miss=23-36%;ulmBLAS<5%"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(rows()))

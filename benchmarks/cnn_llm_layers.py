@@ -1,0 +1,92 @@
+"""Paper Figs 12/13/14 + Table 3: per-layer GEMM speedups.
+
+* Fig 12: square matmul sizes 32…1024 (RISC-V SMM sweep).
+* Fig 13 / Table 3: CNN layers cast to GEMM (AlexNet, ResNet, VGG, MobileNet).
+* Fig 14: LLM self-attention / feed-forward layer GEMMs (BERT-B/L, GPT-2L,
+  GPT-3S) — the paper evaluates the matmuls of SA and FF blocks at seq 512.
+
+Derived metric per shape: v5e-modeled CAMP speedup over fp32 (the TPU-native
+analogue of the paper's clock-cycle ratios) + measured XLA-CPU time of the
+real jitted op for the smaller shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, modeled_gemm_s, time_call
+from repro.core import camp
+
+# Table 3 of the paper: (m, n, k) per layer.
+TABLE3 = {
+    "alexnet": [(169, 256, 3456), (169, 384, 2304), (169, 384, 3456),
+                (3025, 96, 363), (729, 256, 2400)],
+    "smm": [(32, 32, 32), (64, 64, 64), (128, 128, 128), (256, 256, 256),
+            (512, 512, 512), (1024, 1024, 1024)],
+    "resnet": [(12544, 64, 147), (196, 256, 1152), (196, 256, 2304),
+               (3136, 64, 576), (49, 512, 2304), (49, 512, 4608),
+               (784, 128, 1152), (784, 128, 576)],
+    "vgg": [(12544, 128, 1152), (12544, 128, 576), (196, 512, 4608),
+            (3136, 256, 1152), (3136, 256, 2304), (50176, 64, 27),
+            (50176, 64, 576), (784, 512, 2304), (784, 512, 4608)],
+    "mobilenet": [(12544, 32, 27), (12544, 64, 32), (196, 512, 256),
+                  (196, 512, 512), (3136, 128, 128), (3136, 128, 64),
+                  (49, 1024, 1024), (49, 1024, 512), (784, 256, 128),
+                  (784, 256, 256)],
+}
+
+# LLM layer GEMMs at seq 512 (d = hidden, ff = 4d): SA = qkv+proj+scores,
+# FF = two matmuls. We benchmark the dominant (seq×d)×(d×n) shapes.
+LLM = {
+    "bert_base": 768, "bert_large": 1024, "gpt2_large": 1280,
+    "gpt3_small": 768,
+}
+SEQ = 512
+
+
+def _llm_shapes(d):
+    return {
+        "sa": [(SEQ, 3 * d, d), (SEQ, d, d)],        # qkv pack + out proj
+        "ff": [(SEQ, 4 * d, d), (SEQ, d, 4 * d)],
+    }
+
+
+def _bench_shape(m, n, k, measure: bool):
+    model8 = modeled_gemm_s(m, n, k, "fp32") / modeled_gemm_s(m, n, k, "w8a8")
+    model4 = modeled_gemm_s(m, n, k, "fp32") / modeled_gemm_s(m, n, k, "w4a4")
+    t_us = 0.0
+    if measure:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        wq = camp.prepare_weight(w, "w8a8")
+        f = jax.jit(lambda a: camp.camp_matmul(a, wq, qmode="w8a8", impl="xla"))
+        t_us = time_call(f, x, reps=3, warmup=1) * 1e6
+    return t_us, model8, model4
+
+
+def rows(measure_limit: int = 2 ** 22):
+    out = []
+    for net, shapes in TABLE3.items():
+        sp8, sp4 = [], []
+        for i, (m, n, k) in enumerate(shapes):
+            t_us, m8, m4 = _bench_shape(m, n, k, measure=m * n * k < measure_limit)
+            sp8.append(m8)
+            sp4.append(m4)
+            out.append(csv_row(f"fig13_{net}_l{i + 1}_{m}x{n}x{k}", t_us,
+                               f"modeled_w8a8={m8:.1f}x;modeled_w4a4={m4:.1f}x"))
+        out.append(csv_row(f"fig13_{net}_avg", 0.0,
+                           f"modeled_w8a8={np.mean(sp8):.1f}x;"
+                           f"modeled_w4a4={np.mean(sp4):.1f}x"))
+    for name, d in LLM.items():
+        for blk, shapes in _llm_shapes(d).items():
+            for (m, n, k) in shapes:
+                t_us, m8, m4 = _bench_shape(m, n, k, measure=m * n * k < measure_limit)
+                out.append(csv_row(f"fig14_{name}_{blk}_{m}x{n}x{k}", t_us,
+                                   f"modeled_w8a8={m8:.1f}x;modeled_w4a4={m4:.1f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(rows()))

@@ -1,0 +1,65 @@
+"""Paper Fig 17 analogue: instruction-count reduction.
+
+The paper counts vector ISA instructions (CAMP's single outer-product
+instruction replaces broadcast+MAC chains). The XLA analogue is the optimized
+HLO op count of one fused CAMP GEMM versus the *unfused* chain (separate
+quantize / int-matmul / scale-dequant programs, as a naive library would
+dispatch them), plus the Pallas kernel which is literally ONE fused kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.quant import quantize_weight
+from repro.kernels import ops, ref
+
+M, K, N = 512, 512, 512
+
+
+def _n_ops(compiled) -> int:
+    txt = compiled.as_text()
+    return sum(1 for line in txt.splitlines()
+               if "=" in line and not line.strip().startswith(("//", "HloModule",
+                                                               "ENTRY", "}")))
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    wq = quantize_weight(w, 8)
+
+    # unfused chain: 3 separately-dispatched programs (library style)
+    c_quant = jax.jit(lambda a: ops.quantize_rowwise(a, impl="ref")).lower(x).compile()
+    a_q, a_s = ops.quantize_rowwise(x, impl="ref")
+    c_mm = jax.jit(lambda q, b: ref.dot_i32(q, b)).lower(a_q, wq.q).compile()
+    acc = ref.dot_i32(a_q, wq.q)
+    c_deq = jax.jit(
+        lambda i32, sa, sb: (i32.astype(jnp.float32) * (sa * sb))
+    ).lower(acc, a_s, wq.scale).compile()
+    unfused = _n_ops(c_quant) + _n_ops(c_mm) + _n_ops(c_deq)
+
+    # fused CAMP op: one program
+    from repro.core import camp
+    c_fused = jax.jit(
+        lambda a: camp.camp_matmul(a, wq, qmode="w8a8", impl="xla")
+    ).lower(x).compile()
+    fused = _n_ops(c_fused)
+
+    out = [
+        csv_row("fig17_hlo_ops_unfused_chain", 0.0, f"ops={unfused}"),
+        csv_row("fig17_hlo_ops_camp_fused", 0.0,
+                f"ops={fused};reduction={unfused / max(fused, 1):.2f}x"),
+        csv_row("fig17_pallas_kernel_launches", 0.0,
+                "camp_gemm=1_fused_kernel (quantize+matmul+scale epilogue)"),
+        csv_row("fig17_paper_claim", 0.0,
+                "total_instr_reduction~2x;vector_instr_reduction>8x"),
+    ]
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(rows()))

@@ -1,0 +1,140 @@
+"""Regenerate the §Roofline table and §Perf hillclimb table inside
+EXPERIMENTS.md from the dry-run artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from benchmarks.roofline import load, table
+
+ROOT = Path(__file__).resolve().parent.parent
+EXP = ROOT / "EXPERIMENTS.md"
+ART = ROOT / "artifacts" / "dryrun"
+
+
+def _analytic_decode_bytes(r):
+    """Per-device analytic HBM bytes for one decode step: resident weights
+    read once + KV cache read once (the true memory-term floor; the HLO
+    'bytes accessed' from the CPU backend includes fusion artifacts)."""
+    from repro.configs import get_config
+    try:
+        cfg = get_config(r["arch"])
+    except KeyError:
+        return None
+    if r["kind"] != "decode":
+        return None
+    wb = {"none": 2.0, "w8a8": 1.0, "w8a16": 1.0, "w4a8": 0.5,
+          "w4a16": 0.5, "w4a4": 0.5}[r["qmode"]]
+    n_dev = r["n_devices"]
+    weights = cfg.param_count() * wb / n_dev          # every param read once
+    kv_b = 1 if r.get("kv_dtype") == "int8" else 2
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.mixer_of(i) == "attn")
+    seq = {"decode_32k": 32768, "long_500k": 524288}.get(r["shape"], 0)
+    batch = {"decode_32k": 128, "long_500k": 1}.get(r["shape"], 0)
+    kv = (2 * n_attn * batch * cfg.n_kv_heads * seq * cfg.hd * kv_b) / n_dev
+    return weights + kv
+
+
+def _fmt(r):
+    rf, m = r["roofline"], r["memory"]
+    ana = _analytic_decode_bytes(r)
+    ana_s = f"{ana / 819e9 * 1e3:.2f}" if ana else "—"
+    return (f"| {r.get('tag', '')} | {r['qmode']}"
+            f"{'+kv8' if r.get('kv_dtype') else ''} "
+            f"| {rf['compute_s'] * 1e3:.2f} | {rf['memory_s'] * 1e3:.2f} "
+            f"| {ana_s} "
+            f"| {rf['collective_s'] * 1e3:.2f} | {rf['bottleneck'].replace('_s', '')} "
+            f"| {rf['roofline_frac']:.4f} | {m['peak_bytes'] / 2**30:.1f} |")
+
+
+def hillclimb_tables():
+    cells = {
+        "A — qwen2-72b × decode_32k (paper-representative, memory-bound)":
+            "qwen2-72b__decode_32k__single__*",
+        "B — qwen2-72b × train_4k (most collective-bound; ladder climbed on "
+        "2–4L probes, see prose above — full-scale baseline row)":
+            "qwen2-72b__train_4k__single__*",
+        "C — pixtral-12b × prefill_32k (worst roofline fraction)":
+            "pixtral-12b__prefill_32k__single__*",
+        "bonus — jamba-v0.1-52b × decode_32k quantization ladder":
+            "jamba-v0.1-52b__decode_32k__single__*",
+        "bonus — llama4-maverick-400b × decode_32k (EP serving; only fits "
+        "quantized)":
+            "llama4-maverick-400b-a17b__decode_32k__single__*",
+    }
+    out = []
+    for title, pat in cells.items():
+        recs = []
+        for p in sorted(ART.glob(f"{pat}.json")):
+            r = json.loads(p.read_text())
+            if r.get("status") == "OK":
+                recs.append(r)
+        if not recs:
+            continue
+        out.append(f"**{title}**\n")
+        out.append("| variant | qmode | compute ms | memory ms (HLO) "
+                   "| memory ms (analytic) | collective ms "
+                   "| bound | frac | peak GiB |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        recs.sort(key=lambda r: r.get("tag", ""))
+        for r in recs:
+            out.append(_fmt(r))
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    txt = EXP.read_text()
+    roof = "```\n" + "\n".join(table("single")) + "\n```"
+    txt = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+                 f"<!-- ROOFLINE_TABLE -->\n{roof}\n\n", txt, flags=re.S) \
+        if "<!-- ROOFLINE_TABLE -->" in txt else txt
+    analysis = _analysis_block()
+    txt = re.sub(r"<!-- ROOFLINE_ANALYSIS -->.*?(?=\n## )",
+                 f"<!-- ROOFLINE_ANALYSIS -->\n{analysis}\n\n", txt,
+                 flags=re.S) if "<!-- ROOFLINE_ANALYSIS -->" in txt else txt
+    hc = hillclimb_tables()
+    txt = re.sub(r"<!-- PERF_HILLCLIMB -->.*?(?=\n## |\Z)",
+                 f"<!-- PERF_HILLCLIMB -->\n\n{hc}\n", txt, flags=re.S) \
+        if "<!-- PERF_HILLCLIMB -->" in txt else txt
+    EXP.write_text(txt)
+    print("EXPERIMENTS.md refreshed "
+          f"({len(load('single'))} single-pod cells, hillclimb rows embedded)")
+
+
+def _analysis_block():
+    recs = [r for r in load("single") if r.get("status") == "OK"
+            and not r.get("tag")]
+    if not recs:
+        return "(awaiting sweep)"
+    bounds = {}
+    for r in recs:
+        bounds.setdefault(r["roofline"]["bottleneck"], []).append(
+            f"{r['arch']}×{r['shape']}")
+    lines = ["Dominant-term census (baseline cells):", ""]
+    for b, cells in sorted(bounds.items()):
+        lines.append(f"* **{b.replace('_s', '')}-bound** ({len(cells)}): "
+                     + ", ".join(cells))
+    lines.append("")
+    lines.append("Per-cell one-line 'what moves the dominant term':")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        b = r["roofline"]["bottleneck"]
+        hint = {
+            "memory_s": "cut bytes: lower-bit storage (w4a8/int8-KV) or "
+                        "fuse score traffic (flash kernel)",
+            "compute_s": "raise useful-FLOPs ratio: less remat recompute, "
+                         "int8 MXU rate for GEMMs",
+            "collective_s": "reshape collectives: larger MoE groups / "
+                            "resident weights / overlapped ring matmul",
+        }[b]
+        lines.append(f"* {r['arch']} × {r['shape']} [{r['qmode']}]: "
+                     f"{b.replace('_s', '')}-bound → {hint}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

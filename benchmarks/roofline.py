@@ -1,0 +1,71 @@
+"""§Roofline reporting: reads the dry-run artifacts and prints the
+per-(arch × shape) three-term roofline table used in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "single"):
+    recs = []
+    if not ART.exists():
+        return recs
+    for p in sorted(ART.glob(f"*__{mesh}__*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def table(mesh: str = "single"):
+    lines = []
+    hdr = (f"{'arch':<26} {'shape':<12} {'q':<5} {'stat':<4} "
+           f"{'compute_ms':>10} {'memory_ms':>10} {'coll_ms':>9} "
+           f"{'bound':<12} {'useful':>6} {'frac':>6} {'peakGiB':>8} fit")
+    lines.append(hdr)
+    for r in load(mesh):
+        if r["status"].startswith("SKIP"):
+            lines.append(f"{r['arch']:<26} {r['shape']:<12} {r['qmode']:<5} SKIP"
+                         f"  (sub-quadratic-only shape on attention arch)")
+            continue
+        if r["status"] == "FAIL":
+            lines.append(f"{r['arch']:<26} {r['shape']:<12} {r['qmode']:<5} FAIL"
+                         f"  {r.get('error', '')[:70]}")
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        tag = r.get("tag", "")
+        lines.append(
+            f"{r['arch']:<26} {r['shape']:<12} {r['qmode']:<5} OK  "
+            f"{rf['compute_s'] * 1e3:>10.2f} {rf['memory_s'] * 1e3:>10.2f} "
+            f"{rf['collective_s'] * 1e3:>9.2f} "
+            f"{rf['bottleneck'].replace('_s', ''):<12} "
+            f"{rf['useful_flops_ratio']:>6.2f} {rf['roofline_frac']:>6.3f} "
+            f"{m['peak_bytes'] / 2**30:>8.2f} {'Y' if m['fits_16g'] else 'N'}"
+            + (f"  [{tag}]" if tag else ""))
+    return lines
+
+
+def rows():
+    out = []
+    for r in load("single"):
+        if r["status"] != "OK":
+            out.append(csv_row(
+                f"roofline_{r['arch']}_{r['shape']}_{r['qmode']}", 0.0,
+                r["status"]))
+            continue
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        out.append(csv_row(
+            f"roofline_{r['arch']}_{r['shape']}_{r['qmode']}",
+            dom * 1e6,
+            f"bound={rf['bottleneck']};frac={rf['roofline_frac']:.3f};"
+            f"useful={rf['useful_flops_ratio']:.2f};"
+            f"fits16G={r['memory']['fits_16g']}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(table("single")))

@@ -1,0 +1,46 @@
+"""Serve a small model with batched requests through the CAMP pipeline:
+PTQ → prefill → batched greedy decode, comparing bf16 vs w8a8 vs w4a8
+outputs and weight footprints.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.quant import QuantizedTensor
+from repro.models import init_params, quantize_params
+from repro.serving.engine import generate
+
+cfg = get_config("qwen2-0.5b", n_layers=4, d_model=256, n_heads=4,
+                 n_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=8192,
+                 max_seq_len=512)
+key = jax.random.PRNGKey(0)
+params = init_params(key, cfg)
+
+B, PROMPT, STEPS = 4, 48, 24
+prompt = jax.random.randint(key, (B, PROMPT), 0, cfg.vocab_size)
+
+
+def weight_bytes(p):
+    total = 0
+    for leaf in jax.tree.leaves(
+            p, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            total += leaf.memory_bytes()
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+for qmode in ("none", "w8a8", "w4a8"):
+    p = params if qmode == "none" else quantize_params(params, cfg, qmode)
+    t0 = time.time()
+    toks = generate(p, cfg, prompt, steps=STEPS, sample="greedy")
+    dt = time.time() - t0
+    print(f"{qmode:>5}: weights {weight_bytes(p) / 2**20:6.1f} MiB | "
+          f"{B * STEPS / dt:6.1f} tok/s (incl. compile) | "
+          f"first row: {toks[0][:8].tolist()}")

@@ -1,0 +1,46 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the synthetic pipeline, with checkpointing + restart.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+(~100M params on CPU: expect a few seconds/step. Loss should fall from ~9.2
+toward the Markov-source entropy.)
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLMData
+from repro.optim import adamw, cosine_schedule
+from repro.train import build_train_step, init_train_state
+from repro.train import loop as loop_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/camp_train_100m")
+    args = ap.parse_args()
+
+    # qwen3 family at ~100M: 6 layers, d=512, 8 heads, tied embeddings
+    cfg = get_config("qwen3-0.6b", n_layers=6, d_model=512, n_heads=8,
+                     n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+                     max_seq_len=256)
+    opt = adamw(lr=cosine_schedule(1e-3, 30, args.steps), weight_decay=0.01)
+    step = build_train_step(cfg, opt)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state["params"]))
+    print(f"params: {n / 1e6:.1f}M")
+
+    data = SyntheticLMData(cfg.vocab_size, batch=16, seq=128, seed=0)
+    state, hist = loop_lib.run(step, state, data, steps=args.steps,
+                               ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                               log_every=20)
+    print(f"loss: {np.mean(hist['loss'][:5]):.3f} → "
+          f"{np.mean(hist['loss'][-5:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

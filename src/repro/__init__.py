@@ -1,0 +1,3 @@
+"""repro: the CAMP architecture (quantized outer-product GEMM) as a
+production-grade JAX training/inference framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,16 @@
+"""CAMP core: the paper's contribution as composable JAX ops."""
+from repro.core.blocking import BlockConfig, choose_blocks
+from repro.core.camp import QMODES, camp_matmul, prepare_weight, qat_matmul, weight_bits
+from repro.core.hybrid import hybrid_matmul_i8, hybrid_matmul_w4a8, split_nibbles
+from repro.core.quant import (
+    INT4_QMAX,
+    INT8_QMAX,
+    QuantizedTensor,
+    dequantize_rowwise,
+    fake_quant,
+    pack_int4,
+    quantize_colwise,
+    quantize_rowwise,
+    quantize_weight,
+    unpack_int4,
+)

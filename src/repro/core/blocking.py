@@ -1,0 +1,62 @@
+"""GotoBLAS-analog block-size selection for the CAMP Pallas kernels.
+
+The paper chooses ``k_c/m_c/n_R`` so each packed panel lands in the right
+cache level (L3→L2→L1→registers, Fig. 3). The TPU analogue is one level —
+HBM→VMEM — plus MXU shape alignment:
+
+* A-block (bm×bk int8), B-block (bk×bn int8 or bk/2×bn packed int4) and the
+  int32 accumulator (bm×bn) must fit VMEM together, double-buffered.
+* MXU is 128×128; all dims multiples of 128, minor dims ≥ 256 preferred so the
+  int8 lanes stay full (int8 tiling is (32, 128) per register).
+* Larger bk amortizes the accumulator flush (the paper's "kc/16 iterations per
+  store"), so we maximize bk first — same reasoning as GotoBLAS maximizing the
+  L1-resident panel height.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 2**20  # v5e VMEM per core
+MXU = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    bm: int
+    bn: int
+    bk: int
+
+    def vmem_bytes(self, w_bits: int = 8, a_bits: int = 8) -> int:
+        a = self.bm * self.bk * (1 if a_bits == 8 else 1) // (1 if a_bits == 8 else 2)
+        b = self.bk * self.bn // (1 if w_bits == 8 else 2)
+        acc = self.bm * self.bn * 4
+        out = self.bm * self.bn * 4
+        # double-buffered input streams
+        return 2 * (a + b) + acc + out
+
+
+def _round_down_mxu(x: int) -> int:
+    return max(MXU, (x // MXU) * MXU)
+
+
+def choose_blocks(m: int, n: int, k: int, *, w_bits: int = 8, a_bits: int = 8,
+                  vmem_budget: int = VMEM_BYTES // 2) -> BlockConfig:
+    """Pick (bm, bn, bk) fitting ``vmem_budget``, maximizing bk then bm=bn.
+
+    Mirrors GotoBLAS: deepest-loop panel (k_c) first, then the register tile.
+    """
+    bm = min(_round_down_mxu(m), 256)
+    bn = min(_round_down_mxu(n), 256)
+    bk = min(_round_down_mxu(k), 2048)
+    while BlockConfig(bm, bn, bk).vmem_bytes(w_bits, a_bits) > vmem_budget and bk > MXU:
+        bk //= 2
+    while BlockConfig(bm, bn, bk).vmem_bytes(w_bits, a_bits) > vmem_budget and bm > MXU:
+        bm //= 2
+        bn //= 2
+    # Shrink to divide the problem (kernels require divisibility).
+    def _fit(b, dim):
+        b = min(b, dim)
+        while dim % b:
+            b //= 2
+        return max(b, 1)
+    return BlockConfig(_fit(bm, m), _fit(bn, n), _fit(bk, k))

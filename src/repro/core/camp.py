@@ -1,0 +1,113 @@
+"""CAMP public API — the paper's technique as a composable JAX op.
+
+``camp_matmul(x, w)`` is the drop-in replacement for ``x @ W`` in any model
+layer: it dynamically quantizes the activations (per-token rowwise absmax, the
+A-panel of the paper's micro-kernel), runs the integer outer-product GEMM with
+int32 accumulation, and applies the Cartesian scale epilogue. Weights arrive
+pre-quantized as :class:`repro.core.quant.QuantizedTensor` (per-output-channel
+scales; int8, or int4 packed 2-per-byte).
+
+Quantization modes (``qmode``):
+
+  =========  =========================  ==============================
+  qmode      storage                    compute
+  =========  =========================  ==============================
+   none      bf16/f32 weights            bf16 matmul (baseline)
+  w8a8       int8 W (1 B/param)          int8×int8→int32 (CAMP kernel)
+  w4a8       packed int4 W (0.5 B)       int8×int4→int32 (hybrid, 2× rate)
+  w4a4       packed int4 W + int4 A      int4×int4→int32 (4× pairings)
+  w8a16      int8 W                      dequant → bf16 matmul (weight-only)
+  w4a16      packed int4 W               dequant → bf16 matmul (weight-only)
+  =========  =========================  ==============================
+
+The integer modes are the paper's contribution; the weight-only modes are the
+bandwidth-only baseline the roofline analysis compares against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, quantize_weight
+from repro.kernels import ops
+
+QMODES = ("none", "w8a8", "w4a8", "w4a4", "w8a16", "w4a16")
+
+
+def weight_bits(qmode: str) -> Optional[int]:
+    if qmode == "none":
+        return None
+    return 4 if qmode.startswith("w4") else 8
+
+
+def prepare_weight(w: jax.Array, qmode: str):
+    """Quantize a (K, N) weight for ``qmode`` (identity for 'none')."""
+    if qmode not in QMODES:
+        raise ValueError(f"qmode={qmode!r} not in {QMODES}")
+    if qmode == "none":
+        return w
+    return quantize_weight(w, bits=weight_bits(qmode))
+
+
+def camp_matmul(
+    x: jax.Array,
+    w,
+    *,
+    qmode: str = "w8a8",
+    impl: str = "auto",
+    out_dtype=None,
+    block=(256, 256, 512),
+) -> jax.Array:
+    """Quantized matmul ``x @ W`` via the CAMP pipeline.
+
+    ``x``: (..., K) float; ``w``: QuantizedTensor (K, N) (or raw array when
+    qmode='none'). Returns (..., N) in ``out_dtype`` (defaults to x.dtype).
+    """
+    if qmode not in QMODES:
+        raise ValueError(f"qmode={qmode!r} not in {QMODES}")
+    out_dtype = out_dtype or x.dtype
+
+    if qmode == "none":
+        w_arr = w.dequantize() if isinstance(w, QuantizedTensor) else w
+        return jnp.matmul(x, w_arr.astype(x.dtype)).astype(out_dtype)
+
+    assert isinstance(w, QuantizedTensor), type(w)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    assert w.shape[0] == k, (x.shape, w.shape)
+    x2 = x.reshape(-1, k)
+
+    if qmode in ("w8a16", "w4a16"):
+        # Weight-only: bandwidth win, bf16 MXU compute.
+        w_deq = w.dequantize().astype(x.dtype)
+        y = jnp.matmul(x2, w_deq)
+    elif qmode == "w8a8":
+        a_q, a_s = ops.quantize_rowwise(x2, bits=8, impl=impl)
+        y = ops.gemm_i8(a_q, w.q, a_s, w.scale, out_dtype=out_dtype,
+                        impl=impl, block=block)
+    elif qmode == "w4a8":
+        a_q, a_s = ops.quantize_rowwise(x2, bits=8, impl=impl)
+        y = ops.gemm_w4(a_q, w.q, a_s, w.scale, out_dtype=out_dtype,
+                        impl=impl, block=block)
+    else:  # w4a4
+        from repro.core.quant import pack_int4
+        a_q, a_s = ops.quantize_rowwise(x2, bits=4, impl=impl)
+        a_packed = pack_int4(a_q.T).T  # pack along K (last axis)
+        y = ops.gemm_a4w4(a_packed, w.q, k, a_s, w.scale, out_dtype=out_dtype,
+                          impl=impl, block=block)
+    return y.reshape(*lead, w.shape[1]).astype(out_dtype)
+
+
+def qat_matmul(x: jax.Array, w: jax.Array, *, bits: int = 8) -> jax.Array:
+    """Training-side fake-quantized matmul (straight-through gradients).
+
+    Simulates CAMP numerics in the forward pass while keeping bf16 autodiff —
+    the standard QAT recipe for producing weights that survive PTQ to
+    int8/int4.
+    """
+    from repro.core.quant import fake_quant
+    xq = fake_quant(x, bits)
+    wq = fake_quant(w.T, bits).T  # per-output-channel (over K) like PTQ
+    return jnp.matmul(xq, wq)

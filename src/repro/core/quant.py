@@ -1,0 +1,183 @@
+"""Quantization primitives for the CAMP technique.
+
+Symmetric integer quantization in the style the paper targets (int8 and int4),
+plus the packed-int4 storage format the TPU adaptation uses.
+
+Conventions
+-----------
+* Weights ``(K, N)`` are quantized **per output channel** (one scale per column,
+  absmax over K) — matches gemmlowp/QNNPACK per-channel practice.
+* Activations ``(M, K)`` are quantized **per row** (per token) dynamically.
+* int8 values live in [-127, 127] (symmetric, -128 excluded so the hybrid
+  decomposition and negation are exact).
+* int4 values live in [-7, 7] and are **packed two per int8 byte** along the
+  contraction (K) axis, low nibble = even K index. The CPU backend cannot lower
+  native ``jnp.int4`` dots, and on TPU the packed form is what saves HBM
+  bandwidth — the kernel unpacks in VMEM (the paper's "no pack/unpack
+  instruction overhead" maps to "unpack is free relative to HBM").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT8_QMAX = 127
+INT4_QMAX = 7
+
+__all__ = [
+    "INT8_QMAX",
+    "INT4_QMAX",
+    "QuantizedTensor",
+    "quantize_rowwise",
+    "quantize_colwise",
+    "dequantize_rowwise",
+    "pack_int4",
+    "unpack_int4",
+    "quantize_weight",
+    "fake_quant",
+]
+
+
+def _qmax(bits: int) -> int:
+    if bits == 8:
+        return INT8_QMAX
+    if bits == 4:
+        return INT4_QMAX
+    raise ValueError(f"unsupported bits={bits}; CAMP supports 8 and 4")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A quantized weight: integer payload + f32 scales + static metadata.
+
+    ``q`` is int8. For ``bits=4`` the payload is packed 2-per-byte along axis 0
+    (the contraction axis), so ``q.shape == (K // 2, N)`` while
+    ``shape == (K, N)`` records the logical shape.
+    ``scale`` has shape ``(1, N)`` (per output channel).
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    bits: int
+    shape: tuple  # logical (K, N)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.bits, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        bits, shape = aux
+        return cls(q=q, scale=scale, bits=bits, shape=shape)
+
+    @property
+    def dtype(self):  # logical compute dtype of the dequantized weight
+        return self.scale.dtype
+
+    def dequantize(self) -> jax.Array:
+        if self.bits == 4:
+            w = unpack_int4(self.q, self.shape[0])
+        else:
+            w = self.q
+        return w.astype(self.scale.dtype) * self.scale
+
+    def memory_bytes(self) -> int:
+        return int(np.prod(self.q.shape)) + 4 * int(np.prod(self.scale.shape))
+
+
+def quantize_rowwise(x: jax.Array, bits: int = 8):
+    """Symmetric per-row (absmax over the last axis) quantization.
+
+    Returns ``(q_int8, scale)`` with ``scale.shape == x.shape[:-1] + (1,)`` in
+    float32 and ``x ≈ q * scale``. Used for dynamic activation quantization.
+    """
+    qmax = _qmax(bits)
+    # |x| reduced in the input dtype (exact for max), f32 upcast only inside
+    # the single rounding chain — avoids materializing an f32 copy of x.
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_colwise(w: jax.Array, bits: int = 8):
+    """Symmetric per-column (absmax over axis 0) quantization for weights (K, N).
+
+    Returns ``(q_int8, scale)`` with ``scale.shape == (1, N)`` float32.
+    """
+    qmax = _qmax(bits)
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rowwise(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4-valued int8 array 2-per-byte along axis 0.
+
+    ``q``: int8 in [-8, 7], first dim even. Row ``2i`` goes to the low nibble,
+    row ``2i+1`` to the high nibble of output row ``i``.
+    """
+    if q.shape[0] % 2 != 0:
+        raise ValueError(f"K={q.shape[0]} must be even to pack int4")
+    lo = q[0::2]
+    hi = q[1::2]
+    return ((hi.astype(jnp.int8) << 4) | (lo.astype(jnp.int8) & 0x0F)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, k: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extending both nibbles)."""
+    # Arithmetic shifts on int8 sign-extend; (x << 4) >> 4 sign-extends the low
+    # nibble.
+    lo = ((packed.astype(jnp.int8) << 4).astype(jnp.int8) >> 4).astype(jnp.int8)
+    hi = (packed.astype(jnp.int8) >> 4).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=1).reshape((2 * packed.shape[0],) + packed.shape[1:])
+    if k is not None:
+        out = out[:k]
+    return out
+
+
+def quantize_weight(w: jax.Array, bits: int = 8) -> QuantizedTensor:
+    """Quantize a weight matrix (K, N) to a :class:`QuantizedTensor`."""
+    if w.ndim != 2:
+        raise ValueError(f"quantize_weight expects 2-D (K, N); got {w.shape}")
+    q, scale = quantize_colwise(w, bits)
+    if bits == 4:
+        q = pack_int4(q)
+    return QuantizedTensor(q=q, scale=scale.astype(jnp.float32), bits=bits,
+                           shape=tuple(w.shape))
+
+
+# --------------------------------------------------------------------------
+# QAT fake-quant with straight-through estimator (training-side integration).
+# --------------------------------------------------------------------------
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
+    qmax = _qmax(bits)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def _fq_fwd(x, bits):
+    return fake_quant(x, bits), None
+
+
+def _fq_bwd(bits, _, g):
+    return (g,)  # straight-through
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for CAMP compute hot-spots (+ jnp oracles in ref.py)."""

@@ -1,0 +1,91 @@
+"""CAMP int8 GEMM Pallas TPU kernel.
+
+This is the paper's `camp` instruction lifted to MXU granularity:
+
+* paper: one instruction consumes a 4×16 A-panel (column-major) and a 16×4
+  B-panel (row-major) and accumulates a 4×4 int32 tile in an auxiliary
+  register, `kc/16` times, before one store.
+* here: one grid step consumes a (bm×bk) A-block and a (bk×bn) B-block from
+  VMEM and accumulates a (bm×bn) int32 tile in a VMEM scratch accumulator,
+  K/bk times, before one store — with the **Cartesian scale epilogue**
+  (outer product of per-row × per-column scales) fused into the flush.
+
+The GotoBLAS blocking hierarchy of the paper (L3→L2→L1→registers) becomes
+HBM→VMEM→VREG→MXU: ``BlockSpec`` index maps stream panels of A and B through
+VMEM exactly like the 5-loop GotoBLAS schedule streams panels through caches,
+and the int32 accumulator plays the auxiliary register. See
+``repro.core.blocking`` for the block-size selection (the `kc/mc/nR` analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _camp_gemm_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step: acc += A_blk · B_blk; flush on the last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The CAMP outer-product-accumulate: int8 × int8 → int32 on the MXU.
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        # Cartesian (outer-product) scale epilogue: s_a ⊗ s_b.
+        scale = sa_ref[...] * sb_ref[...]  # (bm,1)*(1,bn) -> (bm,bn)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def camp_gemm_i8(
+    a_q: jax.Array,           # (M, K) int8
+    b_q: jax.Array,           # (K, N) int8
+    a_scale: jax.Array,       # (M, 1) f32
+    b_scale: jax.Array,       # (1, N) f32
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"camp_gemm_i8: ({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})")
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _camp_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(a_q, b_q, a_scale, b_scale)

@@ -1,0 +1,106 @@
+"""Flash-attention Pallas TPU kernel (causal, online-softmax).
+
+The prefill roofline is dominated by score traffic: XLA's chunked attention
+writes/reads (bq × S) f32 score blocks through HBM every layer. This kernel
+keeps scores, softmax statistics and the output accumulator in VMEM — HBM
+traffic collapses to Q+K+V+O exactly once, which is what moves the
+memory-roofline term for the 32k prefill cells (EXPERIMENTS §Perf).
+
+Layout: inputs (BH, S, D) — batch×heads folded. Grid (BH, Sq/bq, Skv/bk),
+kv innermost ('arbitrary'), carrying running (m, l, acc) scratch per q-block.
+Causal blocks strictly above the diagonal are skipped via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, bq: int, bk: int, causal: bool):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: the whole kv-block is masked when its first row starts past the
+    # last q row → skip (saves ~half the passes).
+    run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                 # (bq, d)
+        k = k_ref[0]                                 # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qi >= kj, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, D) (same S; GQA callers repeat/fold kv heads).
+
+    Returns (BH, S, D) in q.dtype.
+    """
+    bh, s, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    while s % bq:
+        bq //= 2
+    while s % bk:
+        bk //= 2
+    scale = d ** -0.5
+    grid = (bh, s // bq, s // bk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(q, k, v)

@@ -1,0 +1,101 @@
+"""Jit'd wrappers with implementation dispatch for the CAMP kernels.
+
+Every op exposes ``impl``:
+
+* ``'pallas'`` — the Pallas TPU kernel (``interpret=True`` automatically when
+  running on the CPU backend, which is how this container validates them).
+* ``'xla'``    — plain XLA int8 ``dot_general`` + scale epilogue. This is what
+  the multi-pod dry-run lowers (the CPU backend cannot compile Mosaic), and on
+  TPU it is also the fallback XLA would fuse itself.
+* ``'hybrid'`` — the paper's §3 hybrid-multiplier decomposition (int8 GEMM as
+  four int4-range GEMMs). Bit-exact with 'xla'; exists as the algebraic
+  witness of the hardware design.
+* ``'ref'``    — the pure-jnp oracle from :mod:`repro.kernels.ref`.
+
+``impl='auto'`` picks 'pallas' on TPU and 'xla' elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hybrid as _hybrid
+from repro.kernels import ref as _ref
+from repro.kernels.camp_gemm import camp_gemm_i8 as _pallas_i8
+from repro.kernels.camp_gemm_w4 import camp_gemm_a4w4 as _pallas_a4w4
+from repro.kernels.camp_gemm_w4 import camp_gemm_w4 as _pallas_w4
+from repro.kernels.quantize import quantize_rowwise_kernel as _pallas_quant
+
+_VALID = ("auto", "pallas", "xla", "hybrid", "ref")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl not in _VALID:
+        raise ValueError(f"impl={impl!r} not in {_VALID}")
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def gemm_i8(a_q, b_q, a_scale, b_scale, *, out_dtype=jnp.float32,
+            impl: str = "auto", block=(256, 256, 512)):
+    """CAMP int8 GEMM: (M,K)i8 × (K,N)i8 → (M,N)out_dtype with scale epilogue."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        bm, bn, bk = block
+        return _pallas_i8(a_q, b_q, a_scale, b_scale, block_m=bm, block_n=bn,
+                          block_k=bk, out_dtype=out_dtype, interpret=not _on_tpu())
+    if impl == "hybrid":
+        acc = _hybrid.hybrid_matmul_i8(a_q, b_q)
+        return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
+    if impl == "ref":
+        return _ref.gemm_i8_ref(a_q, b_q, a_scale, b_scale, out_dtype)
+    # 'xla'
+    acc = _ref.dot_i32(a_q, b_q)
+    return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
+
+
+def gemm_w4(a_q, b_packed, a_scale, b_scale, *, out_dtype=jnp.float32,
+            impl: str = "auto", block=(256, 256, 512)):
+    """CAMP a8w4 GEMM: int8 activations × packed-int4 weights."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        bm, bn, bk = block
+        return _pallas_w4(a_q, b_packed, a_scale, b_scale, block_m=bm, block_n=bn,
+                          block_k=bk, out_dtype=out_dtype, interpret=not _on_tpu())
+    if impl == "hybrid":
+        from repro.core.quant import unpack_int4
+        b_q = unpack_int4(b_packed, a_q.shape[-1])
+        acc = _hybrid.hybrid_matmul_w4a8(a_q, b_q)
+        return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
+    if impl == "ref":
+        return _ref.gemm_w4_ref(a_q, b_packed, a_scale, b_scale, out_dtype)
+    # 'xla': unpack outside the (nonexistent) kernel, then int8 dot.
+    from repro.core.quant import unpack_int4
+    b_q = unpack_int4(b_packed, a_q.shape[-1])
+    acc = _ref.dot_i32(a_q, b_q)
+    return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
+
+
+def gemm_a4w4(a_packed, b_packed, k, a_scale, b_scale, *, out_dtype=jnp.float32,
+              impl: str = "auto", block=(256, 256, 512)):
+    """CAMP int4 GEMM: both operands packed 2-per-byte along K (logical K=k)."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        bm, bn, bk = block
+        return _pallas_a4w4(a_packed, b_packed, a_scale, b_scale, block_m=bm,
+                            block_n=bn, block_k=bk, out_dtype=out_dtype,
+                            interpret=not _on_tpu())
+    return _ref.gemm_a4w4_ref(a_packed, b_packed, k, a_scale, b_scale, out_dtype)
+
+
+def quantize_rowwise(x, *, bits: int = 8, impl: str = "auto", block_m: int = 256):
+    """Fused dynamic rowwise quantization: x → (int8 q, f32 scale (M,1))."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _pallas_quant(x, bits=bits, block_m=block_m, interpret=not _on_tpu())
+    return _ref.quantize_rowwise_ref(x, bits)

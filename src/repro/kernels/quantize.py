@@ -1,0 +1,59 @@
+"""Fused rowwise absmax quantization Pallas kernel.
+
+Dynamic activation quantization is on the critical path of every CAMP GEMM
+(the paper's A-panel packing step). Fusing absmax + scale + round + clip into
+one VMEM pass avoids materializing the f32 activation twice in HBM.
+
+Each grid step owns a (bm, K) row-block: the absmax reduction needs the whole
+row, so K is not blocked (activations rows are ≤ ~32K elements → ≤ 128 KiB
+f32 per row, far under VMEM at bm ≤ 256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import INT4_QMAX, INT8_QMAX
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, *, qmax):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "interpret"))
+def quantize_rowwise_kernel(
+    x: jax.Array,            # (M, K) f32/bf16
+    *,
+    bits: int = 8,
+    block_m: int = 256,
+    interpret: bool = False,
+):
+    m, k = x.shape
+    bm = min(block_m, m)
+    if m % bm:
+        raise ValueError(f"quantize_rowwise_kernel: M={m} not divisible by bm={bm}")
+    qmax = INT8_QMAX if bits == 8 else INT4_QMAX
+    q, s = pl.pallas_call(
+        functools.partial(_quantize_kernel, qmax=qmax),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s

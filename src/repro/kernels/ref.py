@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (bit-exact for the
+integer paths). They are deliberately written in the most direct way possible —
+no blocking, no fusion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import unpack_int4, INT4_QMAX, INT8_QMAX
+
+
+def dot_i32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact integer GEMM: int8/int4-valued (M,K)x(K,N) -> int32."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def gemm_i8_ref(a_q, b_q, a_scale, b_scale, out_dtype=jnp.float32):
+    """CAMP int8 GEMM oracle: exact int32 accumulate + Cartesian scale epilogue.
+
+    a_q: (M, K) int8, b_q: (K, N) int8,
+    a_scale: (M, 1) f32, b_scale: (1, N) f32.
+    """
+    acc = dot_i32(a_q, b_q)
+    return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
+
+
+def gemm_w4_ref(a_q, b_packed, a_scale, b_scale, out_dtype=jnp.float32):
+    """CAMP a8w4 GEMM oracle: unpack int4 weights then exact int32 GEMM."""
+    k = a_q.shape[-1]
+    b_q = unpack_int4(b_packed, k)
+    return gemm_i8_ref(a_q, b_q, a_scale, b_scale, out_dtype)
+
+
+def gemm_a4w4_ref(a_packed, b_packed, k, a_scale, b_scale, out_dtype=jnp.float32):
+    """CAMP int4×int4 GEMM oracle: both operands packed along K."""
+    a_q = unpack_int4(a_packed.T, k).T  # a packed along last (K) axis
+    b_q = unpack_int4(b_packed, k)
+    return gemm_i8_ref(a_q, b_q, a_scale, b_scale, out_dtype)
+
+
+def quantize_rowwise_ref(x, bits=8):
+    """Oracle for the fused rowwise-quantize kernel."""
+    qmax = INT8_QMAX if bits == 8 else INT4_QMAX
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """Oracle for the flash-attention kernel. q,k,v: (S, H) per head-batch slice
+    or (B, H, S, D); this oracle handles (B, H, S, D)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

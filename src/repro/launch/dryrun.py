@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count at first init.
+# 512 placeholder host devices exist ONLY inside this dry-run process.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the real step function (train_step / prefill_step / decode_step)
+     with ShapeDtypeStruct inputs (no allocation),
+  3. ``jit(...).lower(...).compile()`` — sharding mismatches, OOM-at-compile
+     or unsupported collectives fail HERE, which is the point,
+  4. records ``memory_analysis()`` (bytes/device — proves fit),
+     ``cost_analysis()`` (per-partition FLOPs/bytes) and the collective
+     schedule parsed from the optimized HLO,
+  5. derives the three roofline terms (v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+     ~50 GB/s/link ICI) and writes one JSON artifact per cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, get_config
+from repro.configs.shapes import SHAPES, runnable
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params, quantize_params
+from repro.optim import adamw
+from repro.parallel.sharding import make_rules, mesh_context, params_pspecs, spec_for
+from repro.serving.engine import build_decode_step, build_prefill_step
+from repro.train import build_train_step
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16 (int8 ≈ 394e12)
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+HBM_BYTES = 16 * 2**30
+
+BIG_PARAM_THRESHOLD = 20e9   # int8 optimizer moments above this
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, rules, mesh):
+    if cfg.embedding_inputs:
+        inp = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+        inp_spec = spec_for(inp.shape, ("batch", "seq_act", None), rules, mesh)
+    else:
+        inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        inp_spec = spec_for(inp.shape, ("batch", "seq_act"), rules, mesh)
+    lab = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lab_spec = spec_for(lab.shape, ("batch", "seq_act"), rules, mesh)
+    return ({"inputs": inp, "labels": lab},
+            {"inputs": NamedSharding(mesh, inp_spec),
+             "labels": NamedSharding(mesh, lab_spec)})
+
+
+_CACHE_AXES = {
+    "k": ("batch", "kv_heads", "seq_kv", None),
+    "v": ("batch", "kv_heads", "seq_kv", None),
+    "h": ("batch", "ssm_inner", None),
+    "conv": ("batch", None, "ssm_inner"),
+    "s": ("batch", "heads", None, None),
+    "x_prev": ("batch", None),
+}
+
+
+def cache_pspecs(tree, rules, mesh):
+    def walk(node, name=None):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        names = _CACHE_AXES.get(name, (None,) * len(node.shape))
+        return NamedSharding(mesh, spec_for(node.shape, names, rules, mesh))
+    return walk(tree)
+
+
+def opt_pspecs(params_specs, quantized: bool):
+    """Moment pspecs mirror the parameter pspecs (int8 moments keep the param
+    shape; their (…,1) scales drop the last axis binding)."""
+    def one(spec):
+        if not quantized:
+            return spec
+        scale_spec = P(*(tuple(spec) [:-1] + (None,))) if len(spec) else P()
+        return {"q": spec, "scale": scale_spec}
+    moments = jax.tree_util.tree_map(one, params_specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    return {"m": moments, "v": moments, "count": P()}
+
+
+def serve_cfg(cfg: ModelConfig, kind: str) -> ModelConfig:
+    """Per-kind config tweaks (q-chunked exact attention for long prefill)."""
+    if kind == "prefill":
+        # heads that don't shard over model=16 leave attention replicated —
+        # shrink the q chunk so per-chunk score buffers stay a few GiB.
+        chunk = 4096 if (cfg.n_heads == 0 or cfg.n_heads % 16 == 0) else 512
+        return dataclasses.replace(cfg, attn_q_chunk=chunk, remat=True)
+    if kind == "train":
+        # q-chunked causal attention bounds the remat-recompute score buffer
+        return dataclasses.replace(cfg, attn_q_chunk=1024)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (step_fn, args, in_shardings, donate)
+# ---------------------------------------------------------------------------
+def build_train_cell(cfg: ModelConfig, shape, mesh, rules):
+    cfg = serve_cfg(cfg, "train")
+    quant_moments = cfg.param_count() > BIG_PARAM_THRESHOLD
+    opt = adamw(lr=1e-4, quantize_moments=quant_moments)
+    step_fn = build_train_step(cfg, opt)
+
+    params_shape = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_shape = jax.eval_shape(lambda: opt.init(params_shape))
+    p_specs = params_pspecs(params_shape, rules, mesh)
+    state_shape = {"params": params_shape, "opt": opt_shape,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_specs = {"params": p_specs,
+                   "opt": opt_pspecs(p_specs, quant_moments),
+                   "step": P()}
+    state_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    batch, b_shardings = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                     rules, mesh)
+    return (step_fn, (state_shape, batch), (state_shardings, b_shardings), (0,))
+
+
+def _serve_params(cfg: ModelConfig, qmode: str, mesh, rules):
+    def make():
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        return quantize_params(p, cfg, qmode)
+    params_shape = jax.eval_shape(make)
+    p_specs = params_pspecs(params_shape, rules, mesh)
+    from repro.core.quant import QuantizedTensor
+
+    def conv(node):
+        if isinstance(node, QuantizedTensor):
+            return QuantizedTensor(q=NamedSharding(mesh, node.q),
+                                   scale=NamedSharding(mesh, node.scale),
+                                   bits=node.bits, shape=node.shape)
+        if isinstance(node, P):
+            return NamedSharding(mesh, node)
+        return node
+    p_shardings = jax.tree_util.tree_map(
+        conv, p_specs, is_leaf=lambda x: isinstance(x, (P, QuantizedTensor)))
+    return params_shape, p_shardings
+
+
+def build_prefill_cell(cfg: ModelConfig, shape, mesh, rules, qmode: str):
+    cfg = serve_cfg(cfg, "prefill")
+    step = build_prefill_step(cfg)
+    params_shape, p_shard = _serve_params(cfg, qmode, mesh, rules)
+    from repro.serving.engine import init_serve_caches
+    caches_shape = jax.eval_shape(
+        lambda: init_serve_caches(cfg, shape.global_batch, shape.seq_len))
+    c_shard = cache_pspecs(caches_shape, rules, mesh)
+    if cfg.embedding_inputs:
+        inp = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len,
+                                    cfg.d_model), jnp.bfloat16)
+        i_spec = spec_for(inp.shape, ("batch", "seq_act", None), rules, mesh)
+    else:
+        inp = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+        i_spec = spec_for(inp.shape, ("batch", "seq_act"), rules, mesh)
+    return (step, (params_shape, inp, caches_shape),
+            (p_shard, NamedSharding(mesh, i_spec), c_shard), (2,))
+
+
+def build_decode_cell(cfg: ModelConfig, shape, mesh, rules, qmode: str,
+                      kv_dtype=None):
+    cfg = serve_cfg(cfg, "decode")
+    step = build_decode_step(cfg)
+    params_shape, p_shard = _serve_params(cfg, qmode, mesh, rules)
+    from repro.serving.engine import init_serve_caches
+    caches_shape = jax.eval_shape(
+        lambda: init_serve_caches(cfg, shape.global_batch, shape.seq_len,
+                                  kv_dtype=kv_dtype))
+    c_shard = cache_pspecs(caches_shape, rules, mesh)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_spec = spec_for(tok.shape, ("batch", None), rules, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (step, (params_shape, caches_shape, tok, pos),
+            (p_shard, c_shard, NamedSharding(mesh, t_spec), None), (1,))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing → wire bytes per device
+# ---------------------------------------------------------------------------
+_DT_BYTES = {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+             "u64": 8, "c64": 8}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\[[\d,]+\]<=\[[\d,x]+\])")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DT_BYTES.get(dt, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return total_devices
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, len(first.split(",")))
+    dims = [int(x) for x in g[1:g.index("]")].split(",")]
+    return dims[-1] if len(dims) >= 2 else dims[0]
+
+
+def parse_collectives(hlo_text: str, total_devices: int):
+    """Per-device wire-byte estimate per collective kind (ring algorithms).
+
+    HLO here is post-SPMD-partitioning: result shapes are per-device. With
+    result bytes R on a ring of n participants:
+      all-gather      R(n-1)/n    (R is the gathered full block)
+      all-reduce      2R(n-1)/n
+      reduce-scatter  R(n-1)      (R is the scattered shard)
+      all-to-all      R(n-1)/n
+      collective-permute  R
+    ``-done`` halves of async pairs are skipped (counted at ``-start``).
+    """
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0})
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        mm = re.search(r"\b(" + "|".join(_COLL_KINDS) + r")(-start)?\(", line)
+        if not mm or f"{mm.group(1)}-done" in line:
+            continue
+        kind = mm.group(1)
+        lhs = line.partition("=")[0] + line.partition("=")[2].split(kind)[0]
+        shapes = _SHAPE_RE.findall(lhs)
+        if not shapes:
+            continue
+        r_bytes = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+        n = _group_size(line, total_devices)
+        if n <= 1:
+            continue
+        if kind == "all-gather":
+            wire = r_bytes * (n - 1) / n
+        elif kind == "all-reduce":
+            wire = 2 * r_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = r_bytes * (n - 1)
+        elif kind == "all-to-all":
+            wire = r_bytes * (n - 1) / n
+        else:  # collective-permute
+            wire = r_bytes
+        s = stats[kind]
+        s["count"] += 1
+        s["result_bytes"] += r_bytes
+        s["wire_bytes"] += int(wire)
+    return dict(stats)
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """Global MODEL_FLOPS per step: 6·N_active·tokens (train) /
+    2·N_active·tokens (serve)."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch          # decode: 1 token/seq
+
+
+def roofline(record: dict, n_devices: int, cfg: ModelConfig, shape) -> dict:
+    flops = record["cost"].get("flops", 0.0)
+    bytes_acc = record["cost"].get("bytes accessed", 0.0)
+    wire = sum(s["wire_bytes"] for s in record["collectives"].values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_devices
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": (mf / flops) if flops else 0.0,
+        "roofline_frac": (mf / PEAK_FLOPS) / max(compute_s, memory_s,
+                                                 collective_s, 1e-30),
+        "wire_bytes": wire,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, qmode: str = "none",
+             kv_dtype=None, rules_override=None, cfg_override=None,
+             verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, qmode=qmode)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rules = make_rules(mode=shape.kind, multi_pod=multi_pod, family=cfg.family)
+    if rules_override:
+        rules.update(rules_override)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "qmode": qmode, "kv_dtype": kv_dtype,
+        "n_devices": n_dev,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    if not runnable(cfg.family, shape):
+        rec["status"] = "SKIP(sub-quadratic-only)"
+        return rec
+
+    t0 = time.time()
+    try:
+        with mesh_context(mesh, rules):
+            if shape.kind == "train":
+                step, args, shardings, donate = build_train_cell(cfg, shape, mesh, rules)
+            elif shape.kind == "prefill":
+                step, args, shardings, donate = build_prefill_cell(cfg, shape, mesh, rules, qmode)
+            else:
+                step, args, shardings, donate = build_decode_cell(cfg, shape, mesh, rules,
+                                                                  qmode, kv_dtype)
+            lowered = jax.jit(step, in_shardings=shardings,
+                              donate_argnums=donate).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+    except Exception as exc:  # noqa: BLE001 — a failed cell is a recorded bug
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        return rec
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    text = compiled.as_text()
+    colls = parse_collectives(text, n_dev)
+    rec.update({
+        "status": "OK",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            "fits_16g": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                        < HBM_BYTES,
+        },
+        "cost": {k: ca[k] for k in ("flops", "bytes accessed") if k in ca},
+        "collectives": colls,
+        "hlo_ops": len(text.splitlines()),
+    })
+    rec["roofline"] = roofline(rec, n_dev, cfg, shape)
+    if verbose:
+        m = rec["memory"]
+        r = rec["roofline"]
+        print(f"  mem/device: args={m['argument_bytes']/2**30:.2f}GiB "
+              f"temp={m['temp_bytes']/2**30:.2f}GiB peak={m['peak_bytes']/2**30:.2f}GiB "
+              f"fits16G={m['fits_16g']}")
+        print(f"  roofline: compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms collective={r['collective_s']*1e3:.2f}ms "
+              f"→ {r['bottleneck']} | useful={r['useful_flops_ratio']:.2f} "
+              f"frac={r['roofline_frac']:.3f}")
+    return rec
+
+
+def cell_id(arch, shape, multi_pod, qmode, kv_dtype=None, tag=""):
+    mesh = "multi" if multi_pod else "single"
+    kv = f"__kv{kv_dtype}" if kv_dtype else ""
+    t = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh}__{qmode}{kv}{t}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--qmode", default=None,
+                    help="override serve qmode (default: none for train, "
+                         "none+w8a8 sweep for serve)")
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    archs = list(REGISTRY) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            kind = SHAPES[shape_name].kind
+            if args.qmode is not None:
+                qmodes = [args.qmode]
+            else:
+                # baseline = paper-faithful: bf16 training, CAMP w8a8 serving
+                qmodes = ["none"] if kind == "train" else ["w8a8"]
+            for multi_pod in meshes:
+                for qmode in qmodes:
+                    cid = cell_id(arch, shape_name, multi_pod, qmode, args.kv_dtype)
+                    path = out / f"{cid}.json"
+                    if path.exists() and not args.force:
+                        print(f"[cached] {cid}")
+                        results.append(json.loads(path.read_text()))
+                        continue
+                    print(f"[run] {cid}", flush=True)
+                    rec = run_cell(arch, shape_name, multi_pod=multi_pod,
+                                   qmode=qmode, kv_dtype=args.kv_dtype)
+                    path.write_text(json.dumps(rec, indent=1, default=float))
+                    print(f"  -> {rec['status']}"
+                          + (f" ({rec.get('error','')})" if rec["status"] == "FAIL" else ""),
+                          flush=True)
+                    results.append(rec)
+
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"].startswith("SKIP") for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n=== dry-run summary: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL "
+          f"of {len(results)} cells ===")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,144 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: the three selected (arch × shape) cells, each with
+an explicit hypothesis → change ladder. Every variant is a real dry-run
+compile (tagged artifact JSON); the EXPERIMENTS.md §Perf table is generated
+from these.
+
+  A. qwen2-72b × decode_32k  — most representative of the paper's technique:
+     decode is weight-bandwidth-bound; each quantization rung should cut the
+     memory term by the storage ratio.
+       A1 bf16 (reference)  → A0 w8a8 (paper-faithful baseline)
+       → A2 w4a8 (packed int4 weights) → A3 w4a8 + int8 KV cache
+  B. (most collective-bound train cell — selected from the baseline table)
+       B0 baseline → B1 bigger MoE routing groups (fewer, larger a2a)
+       → B2 no-remat (trade memory for recompute-collectives)
+  C. pixtral-12b × prefill_32k — worst roofline fraction:
+       C0 w8a8 chunked-attention baseline → C1 w4a8 weights
+       → C2 q-chunk 8192 (halve score-buffer writebacks)
+       → C3 flash-attention kernel (analytic memory-term entry: kernel
+         validated in interpret mode; Mosaic can't lower on the CPU backend,
+         so its roofline row is computed from first principles and marked
+         `modeled`).
+
+Usage:  PYTHONPATH=src python -m repro.launch.hillclimb --cell A
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch import dryrun as dr
+
+OUT = Path("artifacts/dryrun")
+
+
+def _run(tag: str, **kw):
+    cid = dr.cell_id(kw["arch"], kw["shape_name"], kw.get("multi_pod", False),
+                     kw.get("qmode", "none"), kw.get("kv_dtype"), tag)
+    path = OUT / f"{cid}.json"
+    if path.exists() and not kw.pop("force", False):
+        print(f"[cached] {cid}")
+        return json.loads(path.read_text())
+    print(f"[hillclimb] {cid}", flush=True)
+    kw.pop("force", None)
+    rec = dr.run_cell(**kw)
+    rec["tag"] = tag
+    path.write_text(json.dumps(rec, indent=1, default=float))
+    print(f"  -> {rec['status']}")
+    return rec
+
+
+def cell_a(force=False):
+    base = dict(arch="qwen2-72b", shape_name="decode_32k", multi_pod=False,
+                force=force)
+    _run("A1_bf16", qmode="none", **base)
+    _run("A0_w8a8", qmode="w8a8", **base)          # == sweep baseline
+    _run("A2_w4a8", qmode="w4a8", **base)
+    _run("A3_w4a8_kv8", qmode="w4a8", kv_dtype="int8", **base)
+
+
+def cell_b(arch="llama4-maverick-400b-a17b", force=False):
+    """Most collective-bound cell: MoE expert-parallel decode (token a2a +
+    expert-output combine-gather over the data axis)."""
+    base = dict(arch=arch, shape_name="decode_32k", multi_pod=False,
+                force=force)
+    _run("B0_w8a8", qmode="w8a8", **base)          # == sweep baseline
+    # B1: int4 experts — halves the resident expert bytes AND the dequant
+    # side of every gather the combine path makes.
+    _run("B1_w4a8", qmode="w4a8", **base)
+    # B2: experts sharded over model instead of data (TP-experts): combine
+    # gathers move to the model axis; token a2a disappears, weight residency
+    # per device grows 16×/|data| — hypothesis: worse memory, less wire.
+    _run("B2_experts_model", qmode="w8a8",
+         rules_override={"expert": ("model",), "expert_ff": ("data",)}, **base)
+    # B3: int8 KV on top of the winner
+    _run("B3_w4a8_kv8", qmode="w4a8", kv_dtype="int8", **base)
+
+
+def cell_c(force=False):
+    base = dict(arch="pixtral-12b", shape_name="prefill_32k", multi_pod=False,
+                force=force)
+    _run("C0_w8a8", qmode="w8a8", **base)          # == sweep baseline
+    _run("C1_w4a8", qmode="w4a8", **base)
+    _run("C2_qchunk8k", qmode="w8a8",
+         cfg_override={"attn_q_chunk": 8192}, **base)
+    # C3: flash-attention — analytic roofline entry (kernel interpret-tested)
+    rec = _flash_modeled_entry()
+    (OUT / "pixtral-12b__prefill_32k__single__w8a8__C3_flash.json").write_text(
+        json.dumps(rec, indent=1, default=float))
+    print("[hillclimb] C3_flash (modeled) written")
+
+
+def _flash_modeled_entry():
+    """First-principles memory-term for flash-attention prefill (pixtral).
+
+    Chunked-attention baseline writes+reads per layer per device:
+      scores f32 (B_loc, H_loc, S, S) once written + read  (the term the
+      kernel removes), plus Q/K/V/O traffic.
+    Flash kernel traffic: Q+K+V+O exactly once (scores live in VMEM).
+    """
+    from repro.configs import get_config
+    cfg = get_config("pixtral-12b")
+    B_loc, S, H_loc, Dh = 2, 32768, cfg.n_heads // 16, cfg.hd
+    L = cfg.n_layers
+    qkvo = 4 * B_loc * S * H_loc * Dh * 2                      # bf16
+    scores_rw = 2 * B_loc * H_loc * S * S * 4                  # f32 w+r
+    base_attn_bytes = L * (qkvo + scores_rw)
+    flash_attn_bytes = L * qkvo
+    # non-attention bytes: take the compiled C0 record and subtract the
+    # score traffic analytically.
+    c0 = json.loads((OUT / "pixtral-12b__prefill_32k__single__w8a8__C0_w8a8.json")
+                    .read_text())
+    total_bytes = c0["cost"]["bytes accessed"]
+    new_bytes = max(total_bytes - (base_attn_bytes - flash_attn_bytes), 0.0)
+    rec = dict(c0)
+    rec["tag"] = "C3_flash_modeled"
+    rec["provenance"] = ("memory term recomputed analytically: chunked-score "
+                         "HBM traffic removed (flash kernel keeps scores in "
+                         "VMEM); kernel itself validated vs oracle in "
+                         "interpret mode (tests/test_kernels.py)")
+    rec["cost"] = dict(c0["cost"], **{"bytes accessed": new_bytes})
+    from repro.configs.shapes import SHAPES
+    rec["collectives"] = c0["collectives"]
+    rec["roofline"] = dr.roofline(rec, 256, cfg, SHAPES["prefill_32k"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=["A", "B", "C", "all"], default="all")
+    ap.add_argument("--b-arch", default="jamba-v0.1-52b")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    if args.cell in ("A", "all"):
+        cell_a(args.force)
+    if args.cell in ("C", "all"):
+        cell_c(args.force)
+    if args.cell in ("B", "all"):
+        cell_b(args.b_arch, args.force)
+
+
+if __name__ == "__main__":
+    main()

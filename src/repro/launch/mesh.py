@@ -1,0 +1,25 @@
+"""Production mesh definition.
+
+Single pod: 16×16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — 'pod' is a pure
+data-parallel axis across the DCN/ICI-superpod boundary.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale distribution tests (8 virtual devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,9 @@
+"""Model substrate: config-driven decoder LMs (attn / mamba / rwkv mixers)."""
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    quantize_params,
+)

@@ -1,0 +1,166 @@
+"""GQA attention with rope / qk-norm / qkv-bias, KV cache, q-chunked prefill.
+
+Grouped computation never materializes repeated KV heads: q is viewed as
+(B, S, KV, H/KV, hd) and contracted against (B, T, KV, hd) directly.
+
+Causal prefill at 32k uses **q-chunking** (python-unrolled, so the multi-pod
+dry-run's cost analysis sees every FLOP): each (B, chunk, ...) q-slice attends
+to the full KV — exact, no online-softmax state, peak memory ∝ chunk × T
+instead of T × T.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.modules import apply_rope, linear, rms_norm, rope_freqs
+from repro.parallel.sharding import logical
+
+_NEG = -1e30
+
+# int8 KV-cache fixed-point scale (CAMP storage idea applied to the cache):
+# rope'd keys and values are O(1); |x| ≤ 3.96 representable, step 1/32.
+KV_INT8_SCALE = 1.0 / 32.0
+
+
+def _to_cache_dtype(x: jax.Array, cache_dtype) -> jax.Array:
+    if cache_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _from_cache_dtype(x: jax.Array, out_dtype) -> jax.Array:
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * KV_INT8_SCALE).astype(out_dtype)
+    return x.astype(out_dtype)
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * sc).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * sc).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * sc).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * sc).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["wq_bias"] = jnp.zeros((h * hd,), dtype)
+        p["wk_bias"] = jnp.zeros((kv * hd,), dtype)
+        p["wv_bias"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _grouped_attn(q, k, v, q_pos, k_pos, *, k_len: Optional[jax.Array] = None):
+    """q: (B,S,KV,G,hd); k,v: (B,T,KV,hd); positions for causal masking.
+
+    ``k_len``: optional valid-length (decode: cache fill level). Returns
+    (B,S,KV,G,hd).
+    """
+    hd = q.shape[-1]
+    # bf16 operands, f32 accumulation (MXU semantics) — no f32 copies of q/k
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    mask = q_pos[:, None] >= k_pos[None, :]                      # (S, T) causal
+    if k_len is not None:
+        mask = mask & (k_pos[None, :] < k_len)
+    scores = jnp.where(mask[None, None, None], scores, _NEG)
+    # f32 softmax for stability; probs stored bf16 (flash-attention practice)
+    # — halves the largest attention buffer.
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.astype(q.dtype)
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              *, cache: Optional[dict] = None,
+              cache_pos: Optional[jax.Array] = None, qmode: str = "none"):
+    """x: (B, S, D). Returns (y, new_cache).
+
+    * cache None                       → full causal self-attention (train).
+    * cache given, S > 1               → prefill: attend + fill cache[0:S].
+    * cache given, S == 1, cache_pos   → decode: append + attend over prefix.
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+
+    q = linear(x, p["wq"], p.get("wq_bias"), qmode=qmode).reshape(b, s, h, hd)
+    k = linear(x, p["wk"], p.get("wk_bias"), qmode=qmode).reshape(b, s, kv, hd)
+    v = linear(x, p["wv"], p.get("wv_bias"), qmode=qmode).reshape(b, s, kv, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    cos, sin = rope_freqs(positions, hd, cfg.rope_theta)         # (B,S,hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = logical(q, "batch", "seq", "heads", "head_dim")
+    k = logical(k, "batch", "seq", "kv_heads", "head_dim")
+    v = logical(v, "batch", "seq", "kv_heads", "head_dim")
+
+    new_cache = None
+    if cache is None:
+        k_all, v_all, k_pos, k_len = k, v, positions[0], None
+    else:
+        k_t = jnp.swapaxes(k, 1, 2)                              # (B,KV,S,hd)
+        v_t = jnp.swapaxes(v, 1, 2)
+        if s > 1:   # prefill from position 0
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], _to_cache_dtype(k_t, cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], _to_cache_dtype(v_t, cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            k_all, v_all, k_pos, k_len = k, v, positions[0], None
+        else:       # decode: append at cache_pos, attend over whole cache
+            pos = cache_pos
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], _to_cache_dtype(k_t, cache["k"].dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], _to_cache_dtype(v_t, cache["v"].dtype), (0, 0, pos, 0))
+            new_cache = {"k": ck, "v": cv}
+            t = ck.shape[2]
+            k_all = _from_cache_dtype(jnp.swapaxes(ck, 1, 2), x.dtype)  # (B,T,KV,hd)
+            v_all = _from_cache_dtype(jnp.swapaxes(cv, 1, 2), x.dtype)
+            k_pos = jnp.arange(t)
+            k_len = pos + 1
+
+    qg = q.reshape(b, s, kv, g, hd)
+    if cache is not None and s == 1:
+        q_pos = jnp.full((1,), 0) + cache_pos
+        out = _grouped_attn(qg, k_all, v_all, q_pos, k_pos, k_len=k_len)
+    elif cfg.attn_q_chunk and s > cfg.attn_q_chunk:
+        # exact q-chunked causal attention (python-unrolled)
+        nc = s // cfg.attn_q_chunk
+        assert s % cfg.attn_q_chunk == 0, (s, cfg.attn_q_chunk)
+        k_pos_full = positions[0]
+        chunks = []
+        for i in range(nc):
+            sl = slice(i * cfg.attn_q_chunk, (i + 1) * cfg.attn_q_chunk)
+            chunks.append(_grouped_attn(qg[:, sl], k_all, v_all,
+                                        k_pos_full[sl], k_pos_full))
+        out = jnp.concatenate(chunks, axis=1)
+    else:
+        q_pos = positions[0]
+        out = _grouped_attn(qg, k_all, v_all, q_pos, k_pos)
+
+    out = out.reshape(b, s, h * hd)
+    y = linear(out, p["wo"], qmode=qmode)
+    return y, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, kv, max_len, hd), dtype),
+        "v": jnp.zeros((batch, kv, max_len, hd), dtype),
+    }

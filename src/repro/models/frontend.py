@@ -1,0 +1,33 @@
+"""Modality-frontend STUBS (per assignment: backbone-only for [vlm]/[audio]).
+
+pixtral-12b's ViT patch encoder and musicgen-large's EnCodec tokenizer are not
+part of the assigned backbone; ``input_specs()`` for those architectures
+provides *precomputed* patch/frame embeddings of shape (B, S, d_model). These
+helpers generate synthetic stand-ins for tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def synth_patch_embeddings(key, cfg: ModelConfig, batch: int, seq: int):
+    """Stand-in for a ViT patch encoder output (pixtral)."""
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.bfloat16)
+
+
+def synth_frame_embeddings(key, cfg: ModelConfig, batch: int, seq: int):
+    """Stand-in for EnCodec frame embeddings (musicgen)."""
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.bfloat16)
+
+
+def input_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.embedding_inputs else jnp.int32
+
+
+def input_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.embedding_inputs:
+        return (batch, seq, cfg.d_model)
+    return (batch, seq)

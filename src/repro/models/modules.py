@@ -1,0 +1,127 @@
+"""Shared building blocks: norms, rope, linear-with-CAMP, gated MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camp import camp_matmul
+from repro.core.quant import QuantizedTensor
+from repro.parallel.sharding import logical
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    # variance reduced in f32, but no (B,S,D) f32 materialization: the only
+    # f32 tensor is the (B,S,1) variance (the f32 upcast of x itself would be
+    # a multi-GiB live buffer at 32k prefill).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def group_norm_heads(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                     eps: float = 1e-5) -> jax.Array:
+    """Per-head LayerNorm over the last dim. x: (..., H, hd)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def linear(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
+           qmode: str = "none", impl: str = "auto") -> jax.Array:
+    """``x @ W (+ b)`` — dispatches to the CAMP quantized pipeline when the
+    weight is a :class:`QuantizedTensor`."""
+    if isinstance(w, QuantizedTensor):
+        y = camp_matmul(x, w, qmode=(qmode if qmode != "none" else "w8a8"),
+                        impl=impl)
+    else:
+        y = jnp.matmul(x, w.astype(x.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions: (...,) int → (cos, sin) of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) → rotated x (half-split)."""
+    x32 = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x32[..., :half], x32[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, p: dict, *, qmode: str = "none") -> jax.Array:
+    """SiLU-gated FFN (llama-style): down(silu(gate(x)) * up(x))."""
+    g = linear(x, p["w_gate"], qmode=qmode)
+    u = linear(x, p["w_up"], qmode=qmode)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = logical(h, "batch", "seq", "d_ff")
+    return linear(h, p["w_down"], qmode=qmode)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy; logits (B,S,V) f32-cast, labels (B,S)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_xent(h: jax.Array, head, labels: jax.Array, *,
+                 n_chunks: int = 8) -> jax.Array:
+    """Streamed cross-entropy: never materializes the (B,S,V) logits.
+
+    The (B,S,V) f32 logits (2.5 GiB/device at gb=256×4k with a 152k vocab)
+    and the matching f32 lm_head-gradient buffers are the largest training
+    allocations. Chunking the vocab with an online logsumexp and `remat`
+    around each chunk bounds live memory to one (B,S,V/n) slice — the
+    standard fused-xent production trick. Exact (online max-normalized).
+
+    h: (B,S,D) final hidden; head: (D,V) weight (or QuantizedTensor).
+    """
+    from repro.core.quant import QuantizedTensor
+    if isinstance(head, QuantizedTensor):
+        head = head.dequantize()
+    b, s, d = h.shape
+    v = head.shape[-1]
+    while v % n_chunks:
+        n_chunks -= 1
+    vc = v // n_chunks
+
+    def chunk_stats(h_, head_c, labels_, c0):
+        logits = jnp.matmul(h_, head_c.astype(h_.dtype)).astype(jnp.float32)
+        m = jnp.max(logits, axis=-1)                        # (B,S)
+        s_ = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+        idx = labels_ - c0
+        in_c = (idx >= 0) & (idx < vc)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(idx, 0, vc - 1)[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_c, gold, 0.0)
+        return m, s_, gold
+
+    chunk_stats = jax.checkpoint(chunk_stats, static_argnums=())
+
+    run_m = jnp.full((b, s), -jnp.inf, jnp.float32)
+    run_s = jnp.zeros((b, s), jnp.float32)
+    gold_total = jnp.zeros((b, s), jnp.float32)
+    for c in range(n_chunks):
+        head_c = jax.lax.dynamic_slice_in_dim(head, c * vc, vc, axis=1)
+        m, s_, gold = chunk_stats(h, head_c, labels, c * vc)
+        new_m = jnp.maximum(run_m, m)
+        run_s = run_s * jnp.exp(run_m - new_m) + s_ * jnp.exp(m - new_m)
+        run_m = new_m
+        gold_total = gold_total + gold
+    lse = run_m + jnp.log(run_s)
+    return jnp.mean(lse - gold_total)

@@ -1,0 +1,123 @@
+"""Mamba (S6) selective-SSM mixer — Jamba's recurrent layer.
+
+Training/prefill uses a **parallel associative scan** over time (log-depth,
+all FLOPs visible to the dry-run cost analysis), python-segmented into
+``cfg.ssm_seq_chunks`` pieces so the (B, S, d_inner, N) scan intermediates
+never exceed one segment. Decode is the O(1) single-step recurrence — this is
+what makes the 500k-context cell for hybrid archs trivial at serve time.
+
+The CAMP technique applies to this layer's GEMMs (in/x/dt/out projections);
+the recurrence itself is elementwise and stays in f32 (noted in DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.modules import linear
+from repro.parallel.sharding import logical
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, n, r, cw = (cfg.d_model, cfg.d_inner, cfg.ssm_state_dim,
+                       cfg.dt_rank, cfg.ssm_conv_dim)
+    ks = jax.random.split(key, 6)
+    sc = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, di)) * (cw ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * n)) * (di ** -0.5)).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, di)) * (r ** -0.5)).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),      # softplus ≈ 0.01 init
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * (di ** -0.5)).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: (B,S,di), w: (cw,di).
+
+    ``prev``: (B, cw-1, di) trailing inputs from the previous segment/step.
+    Returns (y, new_prev).
+    """
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_prev = xp[:, xp.shape[1] - (cw - 1):]
+    return y + b, new_prev
+
+
+def _ssm_scan_segment(a: jax.Array, bu: jax.Array, h0: jax.Array):
+    """h_t = a_t ⊙ h_{t-1} + bu_t over axis 1. a, bu: (B,Sseg,di,N) f32.
+
+    Returns (h_all, h_last). Parallel prefix (associative scan).
+    """
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_cum, b_cum = jax.lax.associative_scan(comb, (a, bu), axis=1)
+    h_all = b_cum + a_cum * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                cache: Optional[dict] = None, qmode: str = "none"):
+    """x: (B,S,D) → (y, new_cache). cache = {'h': (B,di,N) f32,
+    'conv': (B,cw-1,di)} for decode/prefill continuation."""
+    b, s, d = x.shape
+    di, n, r = cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank
+
+    xz = linear(x, p["in_proj"], qmode=qmode)
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_in = logical(x_in, "batch", "seq", "ssm_inner")
+
+    prev_conv = cache["conv"] if cache is not None else None
+    x_c, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], prev_conv)
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = linear(x_c, p["x_proj"], qmode=qmode)
+    dt, bm, cm = dbc[..., :r], dbc[..., r:r + n], dbc[..., r + n:]
+    dt = jax.nn.softplus(
+        linear(dt, p["dt_proj"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    a_mat = -jnp.exp(p["A_log"])                                   # (di, N)
+    # decay and driving terms, f32: (B,S,di,N)
+    dec = jnp.exp(dt[..., None] * a_mat[None, None])
+    bu = (dt * x_c.astype(jnp.float32))[..., None] * bm.astype(jnp.float32)[:, :, None, :]
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+
+    nseg = cfg.ssm_seq_chunks if s > cfg.ssm_seq_chunks and s % cfg.ssm_seq_chunks == 0 else 1
+    seg = s // nseg
+    ys = []
+    h = h0
+    for i in range(nseg):                     # python-unrolled: FLOPs counted
+        sl = slice(i * seg, (i + 1) * seg)
+        h_all, h = _ssm_scan_segment(dec[:, sl], bu[:, sl], h)
+        ys.append(jnp.einsum("bsdn,bsn->bsd", h_all, cm.astype(jnp.float32)[:, sl]))
+    y = jnp.concatenate(ys, axis=1)
+    y = y + p["D"].astype(jnp.float32) * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = logical(y, "batch", "seq", "ssm_inner")
+
+    out = linear(y, p["out_proj"], qmode=qmode)
+    new_cache = {"h": h, "conv": new_conv} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, cfg.d_inner), dtype),
+    }

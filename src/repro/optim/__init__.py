@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw, int8_moment_dequant, int8_moment_quant
+from repro.optim.schedule import cosine_schedule

@@ -1,0 +1,119 @@
+"""AdamW with optional int8-quantized moments.
+
+The quantized-moment option is the CAMP storage idea applied to optimizer
+state: each moment tensor is stored as an int8 payload **in the parameter's
+own shape** plus per-row (last-axis) f32 absmax scales, so moment shardings
+mirror parameter shardings exactly (FSDP-friendly). The second moment is
+quantized through a sqrt transform (``q = sqrt(v)/scale``) to compress its
+dynamic range — the standard 8-bit-Adam trick.
+
+For the ≥70B assigned archs this is what fits optimizer state in HBM at 256
+chips (see EXPERIMENTS.md §Dry-run): m,v drop from 8 B/param (f32) to
+~2 B/param.
+
+Functional API (optax-like):
+
+    opt = adamw(lr=..., quantize_moments=True)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = jax.tree.map(lambda p, u: p + u, params, updates)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_moment_quant(x: jax.Array, *, sqrt_transform: bool = False) -> dict:
+    """f32 tensor → {'q': int8 same-shape, 'scale': f32 (..., 1)}."""
+    x32 = x.astype(jnp.float32)
+    if sqrt_transform:
+        x32 = jnp.sqrt(jnp.maximum(x32, 0.0))
+    if x32.ndim == 0:
+        x32 = x32[None]
+        absmax = jnp.abs(x32)
+    else:
+        absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def int8_moment_dequant(m: dict, *, sqrt_transform: bool = False,
+                        scalar: bool = False) -> jax.Array:
+    x = m["q"].astype(jnp.float32) * m["scale"]
+    if sqrt_transform:
+        x = jnp.square(x)
+    if scalar:
+        x = x[0]
+    return x
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def adamw(lr: Union[float, Callable[[jax.Array], jax.Array]] = 1e-3,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, quantize_moments: bool = False,
+          grad_clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def _lr(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    def _qm(x, sqrt_t=False):
+        if quantize_moments:
+            return int8_moment_quant(x, sqrt_transform=sqrt_t)
+        return x.astype(jnp.float32)
+
+    def _dqm(m, like, sqrt_t=False):
+        if quantize_moments:
+            return int8_moment_dequant(m, sqrt_transform=sqrt_t,
+                                       scalar=(like.ndim == 0))
+        return m
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: _qm(jnp.zeros_like(p, jnp.float32)), params),
+            "v": jax.tree.map(lambda p: _qm(jnp.zeros_like(p, jnp.float32), True), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        if grad_clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            clip = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        leaf = lambda x: isinstance(x, dict) and "q" in x if quantize_moments else None
+        m_new = jax.tree.map(
+            lambda mq, g, p: b1 * _dqm(mq, p) + (1 - b1) * g,
+            state["m"], grads, params, is_leaf=leaf)
+        v_new = jax.tree.map(
+            lambda vq, g, p: b2 * _dqm(vq, p, True) + (1 - b2) * jnp.square(g),
+            state["v"], grads, params, is_leaf=leaf)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        step_lr = _lr(count)
+
+        def upd(p, m, v):
+            u = -(step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                u = u - step_lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m_new, v_new)
+        new_state = {
+            "m": jax.tree.map(lambda x: _qm(x), m_new),
+            "v": jax.tree.map(lambda x: _qm(x, True), v_new),
+            "count": count,
+        }
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

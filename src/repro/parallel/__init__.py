@@ -1,0 +1,10 @@
+"""Distribution layer: logical-axis sharding rules, mesh context, collectives."""
+from repro.parallel.sharding import (
+    MeshCtx,
+    active_ctx,
+    logical,
+    make_rules,
+    mesh_context,
+    params_pspecs,
+    spec_for,
+)

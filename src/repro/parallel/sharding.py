@@ -1,0 +1,228 @@
+"""Divisibility-aware logical-axis sharding (MaxText-style, smaller).
+
+Model code never names mesh axes. It annotates tensors with *logical* dim
+names (``logical(x, 'batch', 'seq_act', 'embed')``); a rule table maps logical
+names to mesh-axis candidates. A rule only binds when the dimension size is
+divisible by the mesh axis size and the axis is not already used by another
+dim of the same tensor — this is what makes qwen2-0.5b's 14 heads (indivisible
+by model=16) degrade gracefully to replicated attention while its d_ff=4864
+still shards.
+
+Outside a :func:`mesh_context`, every helper is a no-op, so the same model
+code runs single-device tests unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar[Optional["MeshCtx"]] = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None)
+
+
+class MeshCtx:
+    def __init__(self, mesh: Mesh, rules: Mapping[str, Sequence[str]]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name]
+
+
+def active_ctx() -> Optional[MeshCtx]:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Mapping[str, Sequence[str]]):
+    tok = _CTX.set(MeshCtx(mesh, rules))
+    try:
+        with mesh:           # classic pjit-style mesh context
+            yield _CTX.get()
+    finally:
+        _CTX.reset(tok)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+def make_rules(mode: str = "train", multi_pod: bool = False,
+               family: str = "dense") -> dict:
+    """Logical-name → mesh-axis-candidate tuples (greedy prefix binding).
+
+    Layout decisions (measured on the 512-device dry-run, see EXPERIMENTS.md
+    §Perf iteration log):
+
+    * **train** = flat FSDP/ZeRO-3: the batch carries data×model (1 sample
+      per chip at gb=256), weights+optimizer 2D-sharded (fsdp=data ×
+      model on the wide dim) and gathered per layer. The Megatron-TP+SP
+      alternative triggers GSPMD "involuntary full rematerialization" in the
+      backward pass (245 GiB temp vs 50 GiB) — documented, kept as a manual
+      shard_map path, not the default.
+    * **train for ssm/hybrid**: recurrences must stay shard-local in time, so
+      batch carries only data; heads (WKV) / d_inner (Mamba) carry model.
+    * **serve** = classic TP: weights resident model-sharded; the KV cache's
+      *sequence* dim carries the model axis (kv_heads=8 rarely divides 16) —
+      decode attention becomes seq-parallel with partial-softmax collectives;
+      MoE serves expert-parallel over data (weights resident, token a2a).
+    * multi-pod: the pod axis joins the batch for serving; for training it
+      carries the activation-stash sequence dim (cheap 2-way).
+    """
+    data = ("pod", "data") if multi_pod else ("data",)
+    weights = {
+        "fsdp": ("data",) if mode == "train" else (),
+        "heads_flat": ("model",),
+        "d_ff": ("model",),
+        "vocab": ("model",),
+        "head_dim": (), "embed": (), "ssm_state": (), "conv_dim": (),
+        "moe_capacity": (),
+    }
+    if mode == "train":
+        recurrent = family in ("ssm", "hybrid")
+        return {
+            **weights,
+            "batch": ("data",) if recurrent else ("data", "model"),
+            "batch_out": ("data",),
+            "seq_act": ("pod",) if multi_pod else (),
+            "seq": (),
+            "heads": ("model",) if recurrent else (),
+            "kv_heads": (),
+            "ssm_inner": ("model",),
+            "expert": ("model",),
+            "expert_ff": (),
+            "moe_group": ("data",),   # token groups ⊥ experts: the MoE a2a
+            "seq_kv": (),
+        }
+    if mode in ("prefill", "decode"):
+        return {
+            **weights,
+            "batch": data,
+            "batch_out": data,
+            "seq_act": (),
+            "seq": (),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "ssm_inner": ("model",),
+            "expert": data,            # expert-parallel serving
+            "expert_ff": ("model",),
+            "moe_group": (),           # serve tokens stay batch-sharded
+            "seq_kv": ("model",),
+        }
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]],
+             rules: Mapping[str, Sequence[str]], mesh: Mesh) -> P:
+    """Resolve a PartitionSpec for ``shape`` given logical dim ``names``.
+
+    Divisibility- and reuse-checked: a mesh axis binds to at most one dim, and
+    only when it divides the dim size (joint axes must divide as a product).
+    """
+    assert len(shape) == len(names), (shape, names)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, names):
+        if not name:
+            out.append(None)
+            continue
+        cands = rules.get(name, ())
+        axes = [a for a in cands if a in mesh.shape and a not in used]
+        # Greedy prefix: take the longest prefix of candidate axes whose
+        # product divides the dim.
+        bound = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                bound.append(a)
+                prod *= mesh.shape[a]
+        if bound:
+            used.update(bound)
+            out.append(tuple(bound) if len(bound) > 1 else bound[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def logical(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical dim names (no-op w/o context)."""
+    ctx = active_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(x.shape, names, ctx.rules, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter logical axes by path pattern
+# ---------------------------------------------------------------------------
+# Matched in order against '/'-joined param paths. First hit wins.
+_PARAM_PATTERNS: list[tuple[str, tuple]] = [
+    (r"embedding$",            ("vocab", "fsdp")),
+    (r"lm_head$",              ("fsdp", "vocab")),
+    (r"(wq|wk|wv|wr|wg)$",     ("fsdp", "heads_flat")),
+    (r"(wq|wk|wv)_bias$",      ("heads_flat",)),
+    (r"wo$",                   ("heads_flat", "fsdp")),
+    (r"(w_gate|w_up)$",        ("fsdp", "d_ff")),
+    (r"w_down$",               ("d_ff", "fsdp")),
+    (r"router$",               ("fsdp", None)),
+    (r"experts/(w_gate|w_up)$", ("expert", "fsdp", "expert_ff")),
+    (r"experts/w_down$",       ("expert", "expert_ff", "fsdp")),
+    (r"(in_proj|x_proj|rkvg|time_maa_w[12]|w_lora_[ab]|dt_proj)$", ("fsdp", None)),
+    (r"out_proj$",             (None, "fsdp")),
+    (r"conv_w$",               (None, "ssm_inner")),
+    (r"A_log$",                ("ssm_inner", None)),
+    (r"(scale|bias|norm|A|D|dt_bias|time_.*|w0|u|ln_[xw].*|g_norm.*)$", None),
+]
+
+
+def _axes_for_path(path: str, ndim: int):
+    for pat, axes in _PARAM_PATTERNS:
+        if re.search(pat, path):
+            if axes is None:
+                return (None,) * ndim
+            if len(axes) == ndim:
+                return axes
+            if len(axes) < ndim:  # leading batch-ish dims unsharded
+                return (None,) * (ndim - len(axes)) + tuple(axes)
+            return axes[:ndim]
+    return (None,) * ndim
+
+
+# 'heads_flat' (= n_heads*head_dim or n_kv*head_dim columns) shards over model
+# when divisible — independent of whether per-head activations shard.
+_EXTRA_RULES = {"heads_flat": ("model",)}
+
+
+def params_pspecs(params_tree: Any, rules: Mapping[str, Sequence[str]],
+                  mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a params(-shape) pytree, by path patterns.
+
+    Handles QuantizedTensor leaves: the int payload and its (1, N) scale get
+    column-consistent specs.
+    """
+    from repro.core.quant import QuantizedTensor
+
+    full_rules = {**rules, **_EXTRA_RULES}
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if isinstance(leaf, QuantizedTensor):
+            axes = _axes_for_path(pstr, leaf.q.ndim)
+            qspec = spec_for(leaf.q.shape, axes, full_rules, mesh)
+            sspec = P(*((None,) * (leaf.scale.ndim - 1) + (qspec[-1] if len(qspec) else None,)))
+            return QuantizedTensor(q=qspec, scale=sspec, bits=leaf.bits, shape=leaf.shape)
+        shape = leaf.shape
+        axes = _axes_for_path(pstr, len(shape))
+        return spec_for(shape, axes, full_rules, mesh)
+
+    return jax.tree_util.tree_map_with_path(
+        one, params_tree,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))

@@ -1,0 +1,5 @@
+from repro.serving.engine import (
+    build_decode_step,
+    build_prefill_step,
+    init_serve_caches,
+)

@@ -1,0 +1,88 @@
+"""Serving steps: batched prefill + single-token decode with KV cache.
+
+This is where the CAMP technique earns its keep at scale: decode is
+memory-roofline-bound, so int8/int4 weights (``cfg.qmode``) and optionally
+int8 KV cache cut the dominant roofline term 2–4×. llama4-maverick-400B
+*only* fits the single-pod decode cell quantized (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, init_caches
+
+
+def init_serve_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      kv_dtype: Optional[str] = None):
+    """KV/state caches; ``kv_dtype='int8'`` stores attention KV quantized.
+
+    int8 KV uses a fixed per-cache scale folded at write/read (symmetric,
+    scale baked into the dtype conversion here since rope output is O(1);
+    a per-block scale variant is a straightforward extension).
+    """
+    caches = init_caches(cfg, batch, max_len)
+    if kv_dtype == "int8":
+        def conv(c):
+            if isinstance(c, dict) and "k" in c and "v" in c:
+                return {"k": jnp.zeros(c["k"].shape, jnp.int8),
+                        "v": jnp.zeros(c["v"].shape, jnp.int8)}
+            return c
+        caches = [{k: conv(v) for k, v in layer.items()} for layer in caches]
+    return caches
+
+
+def build_prefill_step(cfg: ModelConfig, *, max_len: Optional[int] = None):
+    """(params, inputs, caches) → (last_token_logits, caches)."""
+
+    def prefill_step(params, inputs, caches):
+        # last_logits_only: a 32k prefill needs the head at ONE position,
+        # not a (B, 32768, V) logits tensor.
+        logits, caches, _ = forward(params, cfg, inputs, caches=caches,
+                                    last_logits_only=True)
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, *, sample: str = "greedy",
+                      temperature: float = 1.0):
+    """(params, caches, token, pos, key) → (next_token, caches).
+
+    ``token``: (B, 1) int32; ``pos``: scalar int32 current position.
+    """
+
+    def decode_step(params, caches, token, pos, key=None):
+        logits, caches, _ = forward(params, cfg, token, caches=caches,
+                                    cache_pos=pos)
+        last = logits[:, -1].astype(jnp.float32)
+        if sample == "greedy":
+            nxt = jnp.argmax(last, axis=-1)
+        else:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return decode_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
+             key=None, sample: str = "greedy", temperature: float = 1.0,
+             max_len: Optional[int] = None):
+    """Simple batched generation loop (prefill + python decode loop)."""
+    b, s = prompt.shape[:2]
+    max_len = max_len or (s + steps)
+    caches = init_serve_caches(cfg, b, max_len)
+    prefill = build_prefill_step(cfg)
+    decode = build_decode_step(cfg, sample=sample, temperature=temperature)
+    last, caches = prefill(params, prompt, caches)
+    tok = jnp.argmax(last.astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(steps - 1):
+        k = None if key is None else jax.random.fold_in(key, i)
+        tok, caches = decode(params, caches, tok, jnp.int32(s + i), k)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+from repro.train.train_step import build_train_step, init_train_state

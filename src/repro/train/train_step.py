@@ -1,0 +1,87 @@
+"""Train-step builder: loss → grads → (optional compression) → AdamW.
+
+* Gradient accumulation is a **python-unrolled** microbatch loop (dry-run
+  FLOP-accounting rule; see DESIGN.md) — at 256 chips the production configs
+  fit full-batch, so accumulation is a runtime feature, not a dry-run one.
+* ``compress_grads='int8'`` applies CAMP-style int8 quantize→dequantize to
+  gradients *before* the (GSPMD-inserted) data-parallel all-reduce psums.
+  Under automatic partitioning XLA reduces in the quantized values' dtype
+  domain (f32 payload, int8 information content); the bandwidth claim is made
+  precise in the manual shard_map collective (repro.parallel.collectives),
+  this flag reproduces the numerics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import Optimizer
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: Optimizer):
+    from repro.models.transformer import init_params
+    params = init_params(key, cfg)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _int8_compress(g: jax.Array) -> jax.Array:
+    """Quantize→dequantize a gradient leaf (per-last-dim-row absmax int8)."""
+    if g.ndim == 0:
+        return g
+    g32 = g.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(g32), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127)
+    return (q * scale).astype(g.dtype)
+
+
+def build_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                     grad_accum: int = 1,
+                     compress_grads: Optional[str] = None,
+                     loss: Callable = loss_fn):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch['inputs']``: (GB, S) (or (GB, S, D) for frontend-stub archs),
+    ``batch['labels']``: (GB, S). With ``grad_accum=k`` the leading dim is
+    split into k python-unrolled microbatches.
+    """
+
+    def one_microbatch(params, mb):
+        return jax.value_and_grad(lambda p: loss(p, cfg, mb))(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            lval, grads = one_microbatch(params, batch)
+        else:
+            gb = batch["labels"].shape[0]
+            assert gb % grad_accum == 0, (gb, grad_accum)
+            mbs = gb // grad_accum
+            lval = jnp.zeros((), jnp.float32)
+            grads = None
+            for i in range(grad_accum):          # unrolled (see module doc)
+                mb = {k: v[i * mbs:(i + 1) * mbs] for k, v in batch.items()}
+                lv, g = one_microbatch(params, mb)
+                lval = lval + lv / grad_accum
+                g = jax.tree.map(lambda x: x / grad_accum, g)
+                grads = g if grads is None else jax.tree.map(
+                    jnp.add, grads, g)
+
+        if compress_grads == "int8":
+            grads = jax.tree.map(_int8_compress, grads)
+
+        updates, opt_state = optimizer.update(grads, state["opt"], params)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = {"loss": lval,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree.leaves(grads)))}
+        return ({"params": new_params, "opt": opt_state,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see exactly ONE device (the dry-run's 512-device override lives only
+# inside launch/dryrun.py, never globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward and
+one train step on CPU, asserting output shapes and finite values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import forward, init_caches, init_params, loss_fn
+
+B, S = 2, 32
+
+
+def _inputs(cfg, key, s=S):
+    if cfg.embedding_inputs:
+        return jax.random.normal(key, (B, s, cfg.d_model), jnp.bfloat16)
+    return jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch, key):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(key, cfg)
+    x = _inputs(cfg, key)
+    logits, _, _ = forward(params, cfg, x)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_finite(arch, key):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(key, cfg)
+    batch = {
+        "inputs": _inputs(cfg, key),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch)))(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.isfinite(np.asarray(g, np.float32)).all()
+                          for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_then_decode(arch, key):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(key, cfg)
+    x = _inputs(cfg, key)
+    caches = init_caches(cfg, B, S + 8)
+    logits, caches, _ = forward(params, cfg, x, caches=caches)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    step = _inputs(cfg, key, s=1)
+    logits2, caches, _ = forward(params, cfg, step, caches=caches,
+                                 cache_pos=jnp.int32(S))
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_full_forward(arch, key):
+    """Incremental decode must agree with a full forward over the same tokens."""
+    cfg = get_config(arch, reduced=True)
+    if cfg.embedding_inputs:
+        pytest.skip("frontend-stub archs exercise token path via labels only")
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, 12), 0, cfg.vocab_size)
+    full_logits, _, _ = forward(params, cfg, toks)
+
+    caches = init_caches(cfg, B, 16)
+    _, caches, _ = forward(params, cfg, toks[:, :8], caches=caches)
+    logits_inc = []
+    for t in range(8, 12):
+        lg, caches, _ = forward(params, cfg, toks[:, t:t + 1], caches=caches,
+                                cache_pos=jnp.int32(t))
+        logits_inc.append(lg)
+    inc = jnp.concatenate(logits_inc, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(inc, np.float32), np.asarray(full_logits[:, 8:12], np.float32),
+        rtol=0.15, atol=0.15)  # bf16 forward; recurrent state in f32

@@ -1,0 +1,146 @@
+"""Distribution-layer tests.
+
+Sharding-rule resolution is tested in-process (pure logic); SPMD numerics
+(sharded == single-device results) run in a subprocess with 8 virtual devices
+so the device-count override never leaks into the test session.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import make_rules, spec_for
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH3 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_dims_bind():
+    rules = make_rules("train", family="dense")
+    spec = spec_for((256, 4096), ("batch", "seq_act"), rules, MESH)
+    assert spec == P(("data", "model"), None)
+
+
+def test_indivisible_dims_fall_back_to_replicated():
+    rules = make_rules("prefill", family="dense")
+    # 14 heads don't divide model=16 → replicated
+    spec = spec_for((32, 128, 14, 64), ("batch", "seq", "heads", "head_dim"),
+                    rules, MESH)
+    assert spec == P("data", None, None, None)
+    # but 32 heads do
+    spec = spec_for((32, 128, 32, 64), ("batch", "seq", "heads", "head_dim"),
+                    rules, MESH)
+    assert spec == P("data", None, "model", None)
+    # batch smaller than the axis cannot shard at all
+    spec = spec_for((2, 128, 32, 64), ("batch", "seq", "heads", "head_dim"),
+                    rules, MESH)
+    assert spec == P(None, None, "model", None)
+
+
+def test_axis_used_once_per_tensor():
+    rules = make_rules("decode", family="dense")
+    # kv=32 grabs model; seq_kv then can't reuse it
+    spec = spec_for((128, 32, 32768, 64),
+                    ("batch", "kv_heads", "seq_kv", None), rules, MESH)
+    assert spec == P("data", "model", None, None)
+    # kv=8 can't bind → seq_kv takes model
+    spec = spec_for((128, 8, 32768, 64),
+                    ("batch", "kv_heads", "seq_kv", None), rules, MESH)
+    assert spec == P("data", None, "model", None)
+
+
+def test_greedy_prefix_joint_binding():
+    rules = make_rules("train", multi_pod=True, family="dense")
+    # multi-pod batch 256 over (data,model)=256 ✓
+    spec = spec_for((256, 64), ("batch", None), rules, MESH3)
+    assert spec == P(("data", "model"), None)
+    # gb=8: data=16 doesn't divide → unsharded
+    spec = spec_for((8, 64), ("batch", None), rules, MESH3)
+    assert spec == P(None, None)
+
+
+def test_params_pspecs_quantized_tensor():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.quant import QuantizedTensor
+    from repro.parallel.sharding import params_pspecs
+
+    tree = {"layers": [{"mlp": {"w_gate": jax.ShapeDtypeStruct((256, 512),
+                                                               jnp.bfloat16)}}],
+            "lm_head": QuantizedTensor(
+                q=jax.ShapeDtypeStruct((256, 1024), jnp.int8),
+                scale=jax.ShapeDtypeStruct((1, 1024), jnp.float32),
+                bits=8, shape=(256, 1024))}
+    rules = make_rules("train", family="dense")
+
+    class M:
+        shape = {"data": 16, "model": 16}
+    specs = params_pspecs(tree, rules, M())
+    assert specs["layers"][0]["mlp"]["w_gate"] == P("data", "model")
+    assert specs["lm_head"].q == P("data", "model")
+    assert specs["lm_head"].scale == P(None, "model")
+
+
+_SPMD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config
+    from repro.models import init_params, loss_fn
+    from repro.parallel.sharding import make_rules, mesh_context, params_pspecs
+    from repro.optim import adamw
+    from repro.train import build_train_step, init_train_state
+
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    opt = adamw(lr=1e-2)
+    step = build_train_step(cfg, opt)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    data = {{
+        "inputs": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                     cfg.vocab_size),
+    }}
+    # single-device reference
+    ref_state, ref_metrics = jax.jit(step)(state, data)
+    ref_loss = float(ref_metrics["loss"])
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = make_rules("train", family="dense")
+    state2 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    with mesh_context(mesh, rules):
+        p_specs = params_pspecs(state2["params"], rules, mesh)
+        sharded_params = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            state2["params"], p_specs,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+        state2 = {{**state2, "params": sharded_params}}
+        sh_state, sh_metrics = jax.jit(step)(state2, data)
+    sh_loss = float(sh_metrics["loss"])
+    assert abs(ref_loss - sh_loss) < 5e-2, (ref_loss, sh_loss)
+    a = np.asarray(ref_state["params"]["final_norm"], np.float32)
+    b = np.asarray(sh_state["params"]["final_norm"], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-3)
+    print("SPMD_OK", ref_loss, sh_loss)
+""")
+
+
+def test_sharded_train_step_matches_single_device():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _SPMD.format(src=os.path.abspath(src))
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=560)
+    assert "SPMD_OK" in res.stdout, (res.stdout[-1000:], res.stderr[-3000:])

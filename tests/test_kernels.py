@@ -1,0 +1,177 @@
+"""Per-kernel validation: shape/dtype sweeps, every impl vs the jnp oracle.
+
+Integer paths must be bit-exact across impls (same quantized inputs); float
+epilogues compare with tight allclose (1-ULP scale differences between eager
+and jitted division are expected).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import camp, hybrid, quant
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+SHAPES = [(8, 16, 8), (128, 128, 128), (256, 512, 384), (64, 1024, 128),
+          (512, 256, 512)]
+BLOCKS = [(64, 64, 64), (128, 128, 128), (128, 128, 256)]
+
+
+def _qdata(m, k, n):
+    a = RNG.integers(-127, 128, (m, k)).astype(np.int8)
+    b = RNG.integers(-127, 128, (k, n)).astype(np.int8)
+    sa = RNG.uniform(0.005, 0.02, (m, 1)).astype(np.float32)
+    sb = RNG.uniform(0.005, 0.02, (1, n)).astype(np.float32)
+    return map(jnp.asarray, (a, b, sa, sb))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gemm_i8_impls_agree(shape):
+    m, k, n = shape
+    a, b, sa, sb = _qdata(m, k, n)
+    want = np.asarray(ref.gemm_i8_ref(a, b, sa, sb))
+    for impl in ("xla", "hybrid"):
+        got = np.asarray(ops.gemm_i8(a, b, sa, sb, impl=impl))
+        np.testing.assert_array_equal(got, want, err_msg=impl)
+    got = np.asarray(ops.gemm_i8(a, b, sa, sb, impl="pallas",
+                                 block=(64, 64, 64)))
+    np.testing.assert_array_equal(got, want, err_msg="pallas")
+
+
+@pytest.mark.parametrize("block", BLOCKS)
+def test_gemm_i8_pallas_blocks(block):
+    m, k, n = 256, 512, 256
+    a, b, sa, sb = _qdata(m, k, n)
+    want = np.asarray(ref.gemm_i8_ref(a, b, sa, sb))
+    got = np.asarray(ops.gemm_i8(a, b, sa, sb, impl="pallas", block=block))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_i8_out_dtypes(out_dtype):
+    a, b, sa, sb = _qdata(128, 256, 128)
+    want = np.asarray(ref.gemm_i8_ref(a, b, sa, sb, out_dtype), np.float32)
+    got = np.asarray(ops.gemm_i8(a, b, sa, sb, impl="pallas",
+                                 block=(64, 64, 64), out_dtype=out_dtype),
+                     np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-2)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gemm_w4_impls_agree(shape):
+    m, k, n = shape
+    a = jnp.asarray(RNG.integers(-127, 128, (m, k)).astype(np.int8))
+    b4 = jnp.asarray(RNG.integers(-7, 8, (k, n)).astype(np.int8))
+    bp = quant.pack_int4(b4)
+    sa = jnp.asarray(RNG.uniform(0.005, 0.02, (m, 1)).astype(np.float32))
+    sb = jnp.asarray(RNG.uniform(0.005, 0.02, (1, n)).astype(np.float32))
+    want = np.asarray(ref.gemm_w4_ref(a, bp, sa, sb))
+    for impl in ("xla", "hybrid"):
+        np.testing.assert_array_equal(
+            np.asarray(ops.gemm_w4(a, bp, sa, sb, impl=impl)), want,
+            err_msg=impl)
+    got = np.asarray(ops.gemm_w4(a, bp, sa, sb, impl="pallas",
+                                 block=(64, 64, 64)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gemm_a4w4_pallas():
+    m, k, n = 128, 256, 128
+    a4 = RNG.integers(-7, 8, (m, k)).astype(np.int8)
+    b4 = RNG.integers(-7, 8, (k, n)).astype(np.int8)
+    ap = quant.pack_int4(jnp.asarray(a4).T).T
+    bp = quant.pack_int4(jnp.asarray(b4))
+    sa = jnp.asarray(RNG.uniform(0.005, 0.02, (m, 1)).astype(np.float32))
+    sb = jnp.asarray(RNG.uniform(0.005, 0.02, (1, n)).astype(np.float32))
+    want = np.asarray(ref.gemm_a4w4_ref(ap, bp, k, sa, sb))
+    got = np.asarray(ops.gemm_a4w4(ap, bp, k, sa, sb, impl="pallas",
+                                   block=(64, 64, 64)))
+    np.testing.assert_array_equal(got, want)
+    # and exact vs direct int matmul
+    direct = (a4.astype(np.int32) @ b4.astype(np.int32)).astype(np.float32)
+    np.testing.assert_allclose(want, direct * np.asarray(sa) * np.asarray(sb),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("mk", [(8, 32), (256, 512), (64, 8192)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quantize_kernel_matches_ref(mk, bits):
+    m, k = mk
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    q_p, s_p = ops.quantize_rowwise(x, bits=bits, impl="pallas",
+                                    block_m=min(64, m))
+    q_r, s_r = ref.quantize_rowwise_ref(x, bits)
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=2e-7)
+
+
+def test_hybrid_exhaustive_scalar_square():
+    """The paper's §3 identity, exhaustively over all int8×int8 pairs."""
+    a = np.arange(-128, 128, dtype=np.int8).reshape(-1, 1)
+    b = np.arange(-128, 128, dtype=np.int8).reshape(1, -1)
+    got = np.asarray(hybrid.hybrid_matmul_i8(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, a.astype(np.int32) @ b.astype(np.int32))
+
+
+def test_hybrid_w4a8_exhaustive():
+    a = np.arange(-128, 128, dtype=np.int8).reshape(-1, 1)
+    b = np.arange(-8, 8, dtype=np.int8).reshape(1, -1)
+    got = np.asarray(hybrid.hybrid_matmul_w4a8(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, a.astype(np.int32) @ b.astype(np.int32))
+
+
+def test_camp_matmul_all_qmodes_close_to_fp32():
+    x = jnp.asarray(RNG.standard_normal((64, 256)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((256, 128)).astype(np.float32))
+    exact = np.asarray(x @ w)
+    scale = np.abs(exact).max()
+    tol = {"w8a8": 0.02, "w8a16": 0.02, "w4a8": 0.15, "w4a16": 0.15,
+           "w4a4": 0.25}
+    for qmode, t in tol.items():
+        wq = camp.prepare_weight(w, qmode)
+        y = np.asarray(camp.camp_matmul(x, wq, qmode=qmode))
+        err = np.abs(y - exact).max() / scale
+        assert err < t, (qmode, err)
+
+
+def test_blocking_fits_vmem_and_divides():
+    from repro.core.blocking import choose_blocks, VMEM_BYTES
+    for (m, n, k) in [(4096, 8192, 8192), (512, 512, 512), (128, 384, 640),
+                      (1024, 152064, 8192)]:
+        b = choose_blocks(m, n, k)
+        assert m % b.bm == 0 and n % b.bn == 0 and k % b.bk == 0
+        assert b.vmem_bytes() <= VMEM_BYTES // 2
+
+
+@pytest.mark.parametrize("shape", [(1, 32, 8), (4, 64, 16), (2, 128, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("blocks", [(16, 16), (32, 16), (64, 64)])
+def test_flash_attention_vs_oracle(shape, causal, blocks):
+    from repro.kernels.flash_attention import flash_attention
+    bh, s, d = shape
+    bq, bk = blocks
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, bh, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, bh, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, bh, s, d)).astype(np.float32))
+    want = ref.attention_ref(q, k, v, causal=causal)[0]
+    got = flash_attention(q[0], k[0], v[0], causal=causal, block_q=bq,
+                          block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((2, 64, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((2, 64, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((2, 64, 16)), jnp.bfloat16)
+    want = ref.attention_ref(q[None], k[None], v[None], causal=True)[0]
+    got = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2,
+                               atol=5e-2)

@@ -1,0 +1,159 @@
+"""Hypothesis property tests for the system's numeric invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import camp, hybrid, quant
+from repro.kernels import ref
+
+_dims = st.integers(min_value=1, max_value=48)
+_even_dims = st.integers(min_value=1, max_value=24).map(lambda x: 2 * x)
+
+
+@settings(deadline=None, max_examples=40)
+@given(m=_dims, k=_even_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_int8_matmul_exact_vs_int64(m, k, n, seed):
+    """int32 accumulation never overflows/differs from exact int64 math for
+    CAMP-sized K (the paper's overflow-handling claim)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    b = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    got = np.asarray(ref.dot_i32(jnp.asarray(a), jnp.asarray(b)))
+    exact = a.astype(np.int64) @ b.astype(np.int64)
+    assert (np.abs(exact) < 2**31).all()          # k ≤ 48·127² < 2^31
+    np.testing.assert_array_equal(got, exact.astype(np.int32))
+
+
+@settings(deadline=None, max_examples=40)
+@given(m=_dims, k=_even_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_hybrid_identity_random_matrices(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)).astype(np.int8))
+    np.testing.assert_array_equal(np.asarray(hybrid.hybrid_matmul_i8(a, b)),
+                                  np.asarray(ref.dot_i32(a, b)))
+
+
+@settings(deadline=None, max_examples=40)
+@given(rows=_dims, k=_even_dims, seed=st.integers(0, 2**31 - 1),
+       scale_pow=st.integers(-8, 8))
+def test_quant_roundtrip_error_bound(rows, k, seed, scale_pow):
+    """|x - dequant(quant(x))| ≤ scale/2 per element (symmetric rounding)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, k)) * 10.0 ** scale_pow).astype(np.float32)
+    q, s = quant.quantize_rowwise(jnp.asarray(x), bits=8)
+    back = np.asarray(quant.dequantize_rowwise(q, s))
+    bound = np.asarray(s) / 2 + 1e-30
+    assert (np.abs(back - x) <= bound + 1e-6 * np.abs(x)).all()
+
+
+@settings(deadline=None, max_examples=40)
+@given(k=_even_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, (k, n)).astype(np.int8)
+    rt = np.asarray(quant.unpack_int4(quant.pack_int4(jnp.asarray(q))))
+    np.testing.assert_array_equal(rt, q)
+
+
+@settings(deadline=None, max_examples=25)
+@given(m=st.integers(1, 16), k=st.integers(2, 32).map(lambda x: 2 * x),
+       n=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_quantized_gemm_error_scales_with_quantization_step(m, k, n, seed):
+    """CAMP w8a8 output error is bounded by the first-order quantization
+    noise model: |err| ≲ K·(sa·sb)/2 terms (loose 4× slack)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    wq = camp.prepare_weight(jnp.asarray(w), "w8a8")
+    y = np.asarray(camp.camp_matmul(jnp.asarray(x), wq, qmode="w8a8",
+                                    out_dtype=jnp.float32))
+    exact = x @ w
+    sa = np.abs(x).max(axis=1, keepdims=True) / 127.0
+    sb = np.asarray(wq.scale)
+    bound = 4.0 * k * (sa / 2 + 1e-12) * np.maximum(np.abs(w).max(), 1.0) \
+        + 4.0 * k * (sb / 2) * np.maximum(np.abs(x).max(), 1.0)
+    assert (np.abs(y - exact) <= bound + 1e-4).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(s=st.integers(2, 8).map(lambda x: 8 * x), seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from([8, 16, 32]))
+def test_wkv6_chunked_equals_sequential(s, seed, chunk):
+    from repro.models.rwkv import _wkv6_chunked, wkv6_sequential_ref
+    rng = np.random.default_rng(seed)
+    b, h, hd = 2, 2, 8
+    r, k, v = (jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+               for _ in range(3))
+    lw = -jnp.clip(jnp.exp(jnp.asarray(
+        rng.standard_normal((b, s, h, hd)), jnp.float32)), 1e-4, 2.5)
+    u = jnp.asarray(rng.standard_normal((h, hd)) * 0.1, jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((b, h, hd, hd)), jnp.float32)
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    y_c, st_c = _wkv6_chunked(r, k, v, lw, u, s0, c)
+    y_r, st_r = wkv6_sequential_ref(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(s=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_mamba_scan_equals_sequential(s, seed):
+    from repro.models.ssm import _ssm_scan_segment
+    rng = np.random.default_rng(seed)
+    b, di, n = 2, 4, 3
+    a = jnp.exp(-jnp.exp(jnp.asarray(rng.standard_normal((b, s, di, n)),
+                                     jnp.float32)))
+    bu = jnp.asarray(rng.standard_normal((b, s, di, n)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, di, n)), jnp.float32)
+    h_all, h_last = _ssm_scan_segment(a, bu, h0)
+    h = h0
+    for t in range(s):
+        h = a[:, t] * h + bu[:, t]
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 4))
+def test_int8_adam_moments_track_fp32(seed, steps):
+    """Quantized-moment AdamW stays close to exact AdamW over a few steps."""
+    from repro.optim import adamw
+    rng = np.random.default_rng(seed)
+    p = {"w": jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)}
+    o_ref = adamw(lr=1e-2, quantize_moments=False, grad_clip_norm=None)
+    o_q = adamw(lr=1e-2, quantize_moments=True, grad_clip_norm=None)
+    s_ref, s_q = o_ref.init(p), o_q.init(p)
+    p_ref, p_q = p, p
+    for i in range(steps):
+        g = {"w": jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)}
+        u_ref, s_ref = o_ref.update(g, s_ref, p_ref)
+        u_q, s_q = o_q.update(g, s_q, p_q)
+        p_ref = jax.tree.map(lambda a, b: a + b, p_ref, u_ref)
+        p_q = jax.tree.map(lambda a, b: a + b, p_q, u_q)
+    np.testing.assert_allclose(np.asarray(p_q["w"]), np.asarray(p_ref["w"]),
+                               rtol=0.15, atol=5e-3)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moe_dropless_capacity_saturates(seed):
+    """Beyond the drop-free point (cf = E/k), raising capacity cannot change
+    the output — every token already got all its k experts."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, moe_ffn
+    cfg = get_config("moonshot-v1-16b-a3b", reduced=True)
+    key = jax.random.PRNGKey(seed)
+    p = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    cf_free = cfg.moe_experts / cfg.moe_top_k
+    y1, _ = moe_ffn(p, dataclasses.replace(cfg, moe_capacity_factor=cf_free), x)
+    y2, _ = moe_ffn(p, dataclasses.replace(cfg, moe_capacity_factor=2 * cf_free), x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
