@@ -1,0 +1,100 @@
+"""Fused vs unfused CAMP GEMM: measured wall-clock + modeled HBM traffic.
+
+Two numbers per shape, following the repo convention (benchmarks/common.py):
+
+* measured — wall-clock of ``camp_matmul`` on THIS host's backend. On the
+  CPU container both paths lower through XLA (``impl='xla'``): the unfused
+  path is the historical quantize→GEMM→epilogue composition of separate
+  dispatches, the fused path is the single jitted graph the fused kernels
+  correspond to. On TPU the same entry points hit the Pallas kernels.
+* modeled — v5e HBM bytes and roofline time for bf16-activation serving.
+  Fusing removes the activation-side int8 round-trip (write int8 + scales,
+  re-read int8) that the unfused path pays between the two kernels.
+
+Also emits ``BENCH_fused_gemm.json`` at the repo root so the perf trajectory
+of this optimization is recorded run over run.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import HBM_BW, PEAK_INT8, csv_row, time_call
+
+# (M, N, K, qmode, tag, reps) — decode- and prefill-shaped LLM linears. The
+# small decode shape is where fusion shows up in *measured* host time even on
+# CPU (the GEMM is cheap, the extra quantize dispatch + int8 round-trip is
+# not); the large shapes are there for the modeled-bytes trajectory.
+SHAPES = [
+    (4, 1024, 1024, "w8a8", "decode-b4", 30),
+    (16, 4096, 4096, "w8a8", "decode-b16", 5),
+    (16, 4096, 4096, "w4a8", "decode-b16-w4", 5),
+    (256, 2048, 2048, "w8a8", "prefill-256", 5),
+]
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_fused_gemm.json")
+
+
+def modeled_hbm_bytes(m: int, n: int, k: int, qmode: str, fused: bool,
+                      a_in_bytes: int = 2) -> float:
+    """Activation + weight + output HBM traffic for one GEMM (bf16 acts)."""
+    a_bits = 4 if qmode == "w4a4" else 8
+    w_bytes = k * n * (0.5 if qmode.startswith("w4") else 1.0)
+    act = m * k * a_in_bytes                 # read activations once
+    if not fused:
+        # quantize kernel writes int8(+scales), GEMM re-reads them from HBM
+        act += 2 * m * k * (a_bits / 8) + 4 * m
+    return act + w_bytes + m * n * 2 + 4 * (m + n)
+
+
+def modeled_time_s(m, n, k, qmode, fused) -> float:
+    flops = 2.0 * m * n * k
+    rate = 2 * PEAK_INT8 if qmode == "w4a4" else PEAK_INT8
+    return max(flops / rate, modeled_hbm_bytes(m, n, k, qmode, fused) / HBM_BW)
+
+
+def rows():
+    from repro.core import camp
+    rng = np.random.default_rng(0)
+    report = {"bench": "fused_gemm", "impl": "xla", "shapes": []}
+    for m, n, k, qmode, tag, reps in SHAPES:
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        wq = camp.prepare_weight(w, qmode)
+
+        def unfused(x=x, wq=wq, qmode=qmode):
+            return camp.camp_matmul(x, wq, qmode=qmode, impl="xla",
+                                    fused=False)
+
+        def fused(x=x, wq=wq, qmode=qmode):
+            return camp.camp_matmul(x, wq, qmode=qmode, impl="xla", fused=True)
+
+        t_un = time_call(unfused, reps=reps)
+        t_fu = time_call(fused, reps=reps)
+        by_un = modeled_hbm_bytes(m, n, k, qmode, fused=False)
+        by_fu = modeled_hbm_bytes(m, n, k, qmode, fused=True)
+        entry = {
+            "tag": tag, "m": m, "n": n, "k": k, "qmode": qmode,
+            "measured_unfused_us": t_un * 1e6,
+            "measured_fused_us": t_fu * 1e6,
+            "measured_speedup": t_un / t_fu,
+            "modeled_hbm_bytes_unfused": by_un,
+            "modeled_hbm_bytes_fused": by_fu,
+            "modeled_hbm_bytes_saved": by_un - by_fu,
+            "modeled_v5e_us_unfused": modeled_time_s(m, n, k, qmode, False) * 1e6,
+            "modeled_v5e_us_fused": modeled_time_s(m, n, k, qmode, True) * 1e6,
+        }
+        report["shapes"].append(entry)
+        yield csv_row(
+            f"fused_gemm/{tag}/unfused", t_un * 1e6,
+            f"modeled {by_un / 1e6:.2f} MB")
+        yield csv_row(
+            f"fused_gemm/{tag}/fused", t_fu * 1e6,
+            f"modeled {by_fu / 1e6:.2f} MB; speedup x{t_un / t_fu:.2f}")
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    yield f"# wrote {os.path.normpath(_JSON_PATH)}"

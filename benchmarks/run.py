@@ -10,7 +10,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (blocking_locality, cnn_llm_layers,
+    from benchmarks import (blocking_locality, cnn_llm_layers, fused_gemm,
                             instruction_count, roofline, table1_smm,
                             table4_conv)
     sections = [
@@ -20,6 +20,7 @@ def main() -> None:
         ("Table 4 (conv throughput)", table4_conv.rows),
         ("Fig 17 (instruction count)", instruction_count.rows),
         ("Roofline (dry-run artifacts)", roofline.rows),
+        ("Fused quantize+GEMM (ISSUE 1)", fused_gemm.rows),
     ]
     print("name,us_per_call,derived")
     ok = True

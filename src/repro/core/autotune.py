@@ -1,0 +1,320 @@
+"""Shape-keyed block-size autotuning for the CAMP GEMM kernels.
+
+``choose_blocks`` (the GotoBLAS-analog analytic pick) is a good seed but a
+single hardcoded block triple cannot be right for both a 1-token decode GEMM
+and a 32k-row prefill GEMM. This module makes block selection a **cache**:
+
+* key — (kernel kind, fused?, M, N, K, backend),
+* candidates — ``choose_blocks`` seed plus its neighborhood (bk halved and
+  doubled, register tile halved and doubled), filtered by VMEM fit,
+* scoring — on a live TPU backend each candidate is timed on synthetic
+  operands (median of a few reps); under ``interpret`` / on non-TPU backends
+  an analytic roofline model (HBM stream bytes per the kernels' actual
+  BlockSpec revisit pattern + MXU flops + per-grid-step overhead) picks the
+  winner instead, so tuning is instant and deterministic in tests,
+* persistence — winners are written through to a JSON cache
+  (``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``) so a serving
+  process never re-tunes a shape another process already paid for.
+
+``ops.gemm_*`` and ``camp_matmul`` use :func:`get_blocks` whenever the caller
+does not pass an explicit block triple. Measurement only happens outside jit
+tracing (shapes are static there anyway; inside a trace the analytic model or
+cache answers).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable, Optional, Tuple
+
+from repro.core.blocking import MXU, VMEM_BYTES, BlockConfig, choose_blocks
+
+# v5e roofline constants (same as benchmarks/common.py; duplicated because
+# src/ must not import the benchmarks/ harness package).
+_PEAK_INT8 = 394e12   # int8 MXU FLOP/s per chip
+_HBM_BW = 819e9       # B/s
+_STEP_OVERHEAD_S = 1e-6  # per-grid-step issue overhead; penalizes tiny blocks
+
+KINDS = ("i8", "w4", "a4w4")
+_KIND_BITS = {"i8": (8, 8), "w4": (4, 8), "a4w4": (4, 4)}  # (w_bits, a_bits)
+
+_lock = threading.Lock()
+_mem_cache: dict = {}
+_disk_loaded = False
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def clear_cache(*, disk: bool = False) -> None:
+    global _disk_loaded
+    with _lock:
+        _mem_cache.clear()
+        _disk_loaded = False
+        if disk:
+            try:
+                os.remove(cache_path())
+            except OSError:
+                pass
+
+
+def _load_disk() -> None:
+    """Merge the JSON cache into memory once per process (under _lock)."""
+    global _disk_loaded
+    if _disk_loaded:
+        return
+    _disk_loaded = True
+    try:
+        with open(cache_path()) as f:
+            on_disk = json.load(f)
+    except (OSError, ValueError):
+        return
+    for key, entry in on_disk.items():
+        _mem_cache.setdefault(key, entry)
+
+
+def _save_disk() -> None:
+    """Atomic read-merge-write of the JSON cache (under _lock); best-effort."""
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        merged = {}
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            pass
+        merged.update(_mem_cache)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(merged, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS etc. — the in-memory cache still works
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def _key(kind: str, fused: bool, m: int, n: int, k: int, backend: str,
+         a_in_bytes: int) -> str:
+    # a_in_bytes only shapes the fused kernels' VMEM row panel; unfused
+    # kernels stream quantized activations, so it stays out of their key.
+    f = f"fused-a{a_in_bytes}B" if fused else "unfused"
+    return f"{kind}|{f}|m{m}|n{n}|k{k}|{backend}"
+
+
+def _fits(kind: str, fused: bool, block: Tuple[int, int, int], k: int,
+          a_in_bytes: int, budget: int = VMEM_BYTES // 2) -> bool:
+    bm, bn, bk = block
+    w_bits, a_bits = _KIND_BITS[kind]
+    if fused:
+        # Fused kernels hold the full (bm, K) activation row-panel in its
+        # storage dtype plus the int8 working block, B double-buffered, the
+        # int32 accumulator, the f32 output tile and the (bm, 1) scales.
+        from repro.kernels.padding import round_up
+        kp = round_up(k, bk)
+        a = bm * kp * a_in_bytes + bm * bk
+        b = 2 * (bk * bn * w_bits // 8)
+        return a + b + bm * bn * 8 + bm * 4 <= budget
+    return BlockConfig(bm, bn, bk).vmem_bytes(w_bits, a_bits) <= budget
+
+
+def candidates(kind: str, m: int, n: int, k: int, *, fused: bool = False,
+               a_in_bytes: int = 4) -> list:
+    """Seed from choose_blocks, then explore its blocking neighborhood."""
+    w_bits, a_bits = _KIND_BITS[kind]
+    seed = choose_blocks(m, n, k, w_bits=w_bits, a_bits=a_bits)
+    cands = []
+
+    def add(bm, bn, bk):
+        bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+        bm, bn, bk = max(bm, 1), max(bn, 1), max(bk, 1)
+        if kind != "i8":
+            bk = max(2, bk - bk % 2)  # packed-K kernels need even bk
+        blk = (bm, bn, bk)
+        if blk not in cands and _fits(kind, fused, blk, k, a_in_bytes):
+            cands.append(blk)
+
+    add(seed.bm, seed.bn, seed.bk)
+    add(seed.bm, seed.bn, seed.bk * 2)
+    add(seed.bm, seed.bn, max(MXU, seed.bk // 2))
+    add(seed.bm * 2, seed.bn * 2, seed.bk)
+    add(max(MXU, seed.bm // 2), max(MXU, seed.bn // 2), seed.bk)
+    add(max(MXU, seed.bm // 2), seed.bn, seed.bk * 2)
+    if fused and not cands:
+        # Large-K fused panel: shrink bm until the row-panel fits VMEM.
+        bm = seed.bm
+        while bm > 1:
+            bm //= 2
+            add(bm, seed.bn, seed.bk)
+            if cands:
+                break
+    if not cands:
+        bm, bn, bk = min(seed.bm, m), min(seed.bn, n), min(seed.bk, k)
+        if kind != "i8":
+            bk = max(2, bk - bk % 2)
+        cands.append((bm, bn, bk))  # last resort: seed, budget notwithstanding
+    return cands
+
+
+def model_time_s(kind: str, m: int, n: int, k: int,
+                 block: Tuple[int, int, int], *, fused: bool = False,
+                 a_in_bytes: int = 4) -> float:
+    """Analytic v5e time for one GEMM under this blocking.
+
+    HBM bytes follow the kernels' BlockSpec revisit pattern: B is re-streamed
+    once per grid row (M/bm); unfused A is re-streamed once per grid column
+    (N/bn); the fused A row-panel's index map is constant in (j, k), so it
+    streams exactly once.
+    """
+    from repro.kernels.padding import round_up
+    bm, bn, bk = block
+    w_bits, a_bits = _KIND_BITS[kind]
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    steps = (mp // bm) * (np_ // bn) * (kp // bk)
+    if fused:
+        a_bytes = mp * kp * a_in_bytes                      # once per i-row
+    else:
+        a_bytes = mp * kp * (a_bits / 8) * (np_ // bn)      # once per j-col
+    b_bytes = kp * np_ * (w_bits / 8) * (mp // bm)
+    o_bytes = mp * np_ * 4.0
+    flops = 2.0 * mp * np_ * kp
+    return max((a_bytes + b_bytes + o_bytes) / _HBM_BW, flops / _PEAK_INT8) \
+        + steps * _STEP_OVERHEAD_S
+
+
+def _measure_time_s(kind: str, m: int, n: int, k: int,
+                    block: Tuple[int, int, int], *, fused: bool,
+                    a_in_bytes: int = 2, reps: int = 3) -> float:
+    """Median wall-clock of the real kernel on synthetic operands (TPU path)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.camp_gemm import camp_gemm_i8
+    from repro.kernels.camp_gemm_fused import (camp_gemm_fused_w4a4,
+                                               camp_gemm_fused_w4a8,
+                                               camp_gemm_fused_w8a8)
+    from repro.kernels.camp_gemm_w4 import camp_gemm_a4w4, camp_gemm_w4
+
+    bm, bn, bk = block
+    sb = jnp.ones((1, n), jnp.float32)
+    kw = dict(block_m=bm, block_n=bn, block_k=bk)
+    if fused:
+        x = jnp.zeros((m, k), jnp.bfloat16 if a_in_bytes == 2 else jnp.float32)
+        bq = jnp.zeros(((k if kind == "i8" else k // 2), n), jnp.int8)
+        fn = {"i8": camp_gemm_fused_w8a8, "w4": camp_gemm_fused_w4a8,
+              "a4w4": camp_gemm_fused_w4a4}[kind]
+        call = lambda: fn(x, bq, sb, **kw)  # noqa: E731
+    else:
+        sa = jnp.ones((m, 1), jnp.float32)
+        if kind == "i8":
+            a = jnp.zeros((m, k), jnp.int8)
+            bq = jnp.zeros((k, n), jnp.int8)
+            call = lambda: camp_gemm_i8(a, bq, sa, sb, **kw)  # noqa: E731
+        elif kind == "w4":
+            a = jnp.zeros((m, k), jnp.int8)
+            bq = jnp.zeros((k // 2, n), jnp.int8)
+            call = lambda: camp_gemm_w4(a, bq, sa, sb, **kw)  # noqa: E731
+        else:
+            a = jnp.zeros((m, k // 2), jnp.int8)
+            bq = jnp.zeros((k // 2, n), jnp.int8)
+            call = lambda: camp_gemm_a4w4(a, bq, sa, sb, **kw)  # noqa: E731
+    jax.block_until_ready(call())  # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def flush() -> None:
+    """Write the in-memory cache through to disk (for ``save=False`` loops)."""
+    with _lock:
+        _save_disk()
+
+
+def tune(kind: str, m: int, n: int, k: int, *, fused: bool = False,
+         a_in_bytes: int = 4, measure: Optional[bool] = None,
+         timer: Optional[Callable] = None,
+         save: bool = True) -> Tuple[int, int, int]:
+    """Pick the best block for (kind, fused, m, n, k) and cache it.
+
+    ``measure=None`` → measure iff running on a real TPU backend. ``timer``
+    overrides the per-candidate scorer (tests use this). ``save=False``
+    defers the disk write — callers tuning many shapes in a loop should
+    :func:`flush` once at the end instead of rewriting the JSON per shape.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"kind={kind!r} not in {KINDS}")
+    backend = _backend()
+    if measure is None:
+        measure = backend == "tpu"
+    key = _key(kind, fused, m, n, k, backend, a_in_bytes)
+
+    best, best_t, source = None, float("inf"), "model"
+    cands = candidates(kind, m, n, k, fused=fused, a_in_bytes=a_in_bytes)
+    for blk in cands:
+        src = "model"
+        if timer is not None:
+            t = timer(blk)
+        elif measure:
+            try:
+                t = _measure_time_s(kind, m, n, k, blk, fused=fused,
+                                    a_in_bytes=a_in_bytes)
+                src = "measured"
+            except Exception:
+                # Mosaic rejected this candidate — never let it compete (an
+                # analytic score would beat every *measured* wall-clock and a
+                # non-compiling block would get cached).
+                continue
+        else:
+            t = model_time_s(kind, m, n, k, blk, fused=fused,
+                             a_in_bytes=a_in_bytes)
+        if t < best_t:
+            best, best_t, source = blk, t, src
+    if best is None:
+        # Every candidate failed to compile — pick the analytic best so the
+        # caller's error is the kernel's own (reproducible) compile error.
+        best = min(cands, key=lambda b: model_time_s(
+            kind, m, n, k, b, fused=fused, a_in_bytes=a_in_bytes))
+        best_t = model_time_s(kind, m, n, k, best, fused=fused,
+                              a_in_bytes=a_in_bytes)
+
+    with _lock:
+        _load_disk()
+        _mem_cache[key] = {"block": list(best), "source": source,
+                           "t_us": best_t * 1e6}
+        if save:
+            _save_disk()
+    return best
+
+
+def get_blocks(kind: str, m: int, n: int, k: int, *, fused: bool = False,
+               a_in_bytes: int = 4,
+               allow_measure: bool = False) -> Tuple[int, int, int]:
+    """Cached block lookup; tunes (and persists) on first sight of a shape.
+
+    ``allow_measure=False`` keeps cold-cache lookups cheap and trace-safe:
+    analytic pick now, and a serving warmup (:func:`tune` with measurement)
+    can overwrite the entry later.
+    """
+    backend = _backend()
+    key = _key(kind, fused, m, n, k, backend, a_in_bytes)
+    with _lock:
+        _load_disk()
+        hit = _mem_cache.get(key)
+    if hit is not None:
+        return tuple(hit["block"])
+    return tune(kind, m, n, k, fused=fused, a_in_bytes=a_in_bytes,
+                measure=(None if allow_measure else False))

@@ -27,8 +27,10 @@ class BlockConfig:
     bk: int
 
     def vmem_bytes(self, w_bits: int = 8, a_bits: int = 8) -> int:
-        a = self.bm * self.bk * (1 if a_bits == 8 else 1) // (1 if a_bits == 8 else 2)
-        b = self.bk * self.bn // (1 if w_bits == 8 else 2)
+        """VMEM footprint of one grid step: double-buffered quantized A/B
+        input streams + the int32 accumulator + the output tile."""
+        a = self.bm * self.bk * a_bits // 8
+        b = self.bk * self.bn * w_bits // 8
         acc = self.bm * self.bn * 4
         out = self.bm * self.bn * 4
         # double-buffered input streams
@@ -53,10 +55,15 @@ def choose_blocks(m: int, n: int, k: int, *, w_bits: int = 8, a_bits: int = 8,
     while BlockConfig(bm, bn, bk).vmem_bytes(w_bits, a_bits) > vmem_budget and bm > MXU:
         bm //= 2
         bn //= 2
-    # Shrink to divide the problem (kernels require divisibility).
+
+    # Prefer a block that divides the dim (zero padding), but never shrink
+    # below the MXU tile to get there: the kernels pad edge blocks, and a
+    # padded 128-wide tile beats a degenerate 2-wide one by orders of
+    # magnitude in grid steps.
     def _fit(b, dim):
         b = min(b, dim)
-        while dim % b:
-            b //= 2
-        return max(b, 1)
+        c = b
+        while dim % c and c > MXU:
+            c //= 2
+        return max(c if dim % c == 0 else b, 1)
     return BlockConfig(_fit(bm, m), _fit(bn, n), _fit(bk, k))

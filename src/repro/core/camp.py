@@ -9,19 +9,29 @@ scales; int8, or int4 packed 2-per-byte).
 
 Quantization modes (``qmode``):
 
-  =========  =========================  ==============================
+  =========  =========================  =========================================
   qmode      storage                    compute
-  =========  =========================  ==============================
+  =========  =========================  =========================================
    none      bf16/f32 weights            bf16 matmul (baseline)
-  w8a8       int8 W (1 B/param)          int8×int8→int32 (CAMP kernel)
-  w4a8       packed int4 W (0.5 B)       int8×int4→int32 (hybrid, 2× rate)
-  w4a4       packed int4 W + int4 A      int4×int4→int32 (4× pairings)
+  w8a8       int8 W (1 B/param)          fused quantize→int8×int8→int32 kernel
+  w4a8       packed int4 W (0.5 B)       fused quantize→int8×int4→int32 (2× rate)
+  w4a4       packed int4 W + int4 A      fused quantize→int4×int4→int32 (4× pair)
   w8a16      int8 W                      dequant → bf16 matmul (weight-only)
   w4a16      packed int4 W               dequant → bf16 matmul (weight-only)
-  =========  =========================  ==============================
+  =========  =========================  =========================================
 
 The integer modes are the paper's contribution; the weight-only modes are the
 bandwidth-only baseline the roofline analysis compares against.
+
+For the integer modes the default path is the **fused kernel family**
+(:mod:`repro.kernels.camp_gemm_fused`): activation quantization happens on the
+VMEM-resident row panel inside the GEMM, so the int8/int4 activation payload
+and its scales never exist in HBM (``fused=False`` restores the two-kernel
+quantize→GEMM composition, which remains the fused path's bit-exactness
+witness). Elementwise tails — ``epilogue=`` with ``bias=``/``operand=``, see
+:mod:`repro.kernels.epilogue` — run on the f32 accumulator inside the kernel
+flush, and block sizes come from the :mod:`repro.core.autotune` cache unless
+``block=`` is given explicitly.
 """
 from __future__ import annotations
 
@@ -32,8 +42,10 @@ import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor, quantize_weight
 from repro.kernels import ops
+from repro.kernels.epilogue import apply_epilogue, validate_epilogue
 
 QMODES = ("none", "w8a8", "w4a8", "w4a4", "w8a16", "w4a16")
+INT_QMODES = ("w8a8", "w4a8", "w4a4")
 
 
 def weight_bits(qmode: str) -> Optional[int]:
@@ -58,46 +70,74 @@ def camp_matmul(
     qmode: str = "w8a8",
     impl: str = "auto",
     out_dtype=None,
-    block=(256, 256, 512),
+    block=None,
+    fused: Optional[bool] = None,
+    epilogue: str = "none",
+    bias: Optional[jax.Array] = None,      # (N,) for the 'bias' stage
+    operand: Optional[jax.Array] = None,   # (..., N) for 'residual'/'mul'
 ) -> jax.Array:
     """Quantized matmul ``x @ W`` via the CAMP pipeline.
 
     ``x``: (..., K) float; ``w``: QuantizedTensor (K, N) (or raw array when
     qmode='none'). Returns (..., N) in ``out_dtype`` (defaults to x.dtype).
+
+    ``fused=None`` → fused quantize-in-kernel path for the integer qmodes
+    (ignored for 'none'/weight-only, which have no activation quantization).
+    ``block=None`` → autotuned block sizes. ``epilogue``/``bias``/``operand``
+    fuse elementwise tails into the kernel flush.
     """
     if qmode not in QMODES:
         raise ValueError(f"qmode={qmode!r} not in {QMODES}")
     out_dtype = out_dtype or x.dtype
+    stages = validate_epilogue(epilogue, bias, operand)
+
+    def _finish_float(y):
+        # Float paths (baseline / weight-only): epilogue as plain XLA tail.
+        if stages:
+            y = apply_epilogue(
+                y.astype(jnp.float32), stages,
+                bias=None if bias is None else bias.reshape(1, -1),
+                operand=None if operand is None else operand.reshape(y.shape))
+        return y.astype(out_dtype)
 
     if qmode == "none":
         w_arr = w.dequantize() if isinstance(w, QuantizedTensor) else w
-        return jnp.matmul(x, w_arr.astype(x.dtype)).astype(out_dtype)
+        return _finish_float(jnp.matmul(x, w_arr.astype(x.dtype)))
 
     assert isinstance(w, QuantizedTensor), type(w)
     lead = x.shape[:-1]
     k = x.shape[-1]
+    n = w.shape[1]
     assert w.shape[0] == k, (x.shape, w.shape)
     x2 = x.reshape(-1, k)
+    opd2 = None if operand is None else operand.reshape(-1, n)
 
     if qmode in ("w8a16", "w4a16"):
         # Weight-only: bandwidth win, bf16 MXU compute.
         w_deq = w.dequantize().astype(x.dtype)
-        y = jnp.matmul(x2, w_deq)
+        y = _finish_float(jnp.matmul(x2, w_deq))
+        return y.reshape(*lead, n)
+
+    if fused is None:
+        fused = True
+    kw = dict(out_dtype=out_dtype, impl=impl, block=block, epilogue=epilogue,
+              bias=bias, operand=opd2)
+    if fused:
+        fn = {"w8a8": ops.gemm_i8_fused, "w4a8": ops.gemm_w4_fused,
+              "w4a4": ops.gemm_a4w4_fused}[qmode]
+        y = fn(x2, w.q, w.scale, **kw)
     elif qmode == "w8a8":
         a_q, a_s = ops.quantize_rowwise(x2, bits=8, impl=impl)
-        y = ops.gemm_i8(a_q, w.q, a_s, w.scale, out_dtype=out_dtype,
-                        impl=impl, block=block)
+        y = ops.gemm_i8(a_q, w.q, a_s, w.scale, **kw)
     elif qmode == "w4a8":
         a_q, a_s = ops.quantize_rowwise(x2, bits=8, impl=impl)
-        y = ops.gemm_w4(a_q, w.q, a_s, w.scale, out_dtype=out_dtype,
-                        impl=impl, block=block)
+        y = ops.gemm_w4(a_q, w.q, a_s, w.scale, **kw)
     else:  # w4a4
         from repro.core.quant import pack_int4
         a_q, a_s = ops.quantize_rowwise(x2, bits=4, impl=impl)
         a_packed = pack_int4(a_q.T).T  # pack along K (last axis)
-        y = ops.gemm_a4w4(a_packed, w.q, k, a_s, w.scale, out_dtype=out_dtype,
-                          impl=impl, block=block)
-    return y.reshape(*lead, w.shape[1]).astype(out_dtype)
+        y = ops.gemm_a4w4(a_packed, w.q, k, a_s, w.scale, **kw)
+    return y.reshape(*lead, n).astype(out_dtype)
 
 
 def qat_matmul(x: jax.Array, w: jax.Array, *, bits: int = 8) -> jax.Array:

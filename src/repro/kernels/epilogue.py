@@ -1,0 +1,128 @@
+"""Fused GEMM epilogues: elementwise tails applied to the f32 accumulator.
+
+The CAMP pipeline's whole point is "one store per accumulator lifetime": the
+int32 tile lives in a VMEM scratch across the K loop and is written to HBM
+exactly once, already scaled. Any elementwise op that runs *after* the GEMM as
+a standalone XLA kernel re-reads and re-writes the (M, N) output through HBM —
+for a decode-shaped GEMM that round-trip costs more than the matmul itself.
+These epilogue stages run on the f32 accumulator inside the kernel flush,
+*before* the single downcast store, so bias/activation/residual-gating never
+touch HBM.
+
+An epilogue is a ``+``-separated stage string applied left to right:
+
+  ==========  ======================================  =================
+  stage       effect on the f32 accumulator ``y``     extra tensor
+  ==========  ======================================  =================
+  ``bias``      ``y + bias``  (broadcast over rows)   ``bias`` (N,)
+  ``silu``      ``silu(y)``                           —
+  ``gelu``      ``gelu(y)`` (tanh approximation)      —
+  ``residual``  ``y + operand``                       ``operand`` (M, N)
+  ``mul``       ``y * operand``                       ``operand`` (M, N)
+  ==========  ======================================  =================
+
+e.g. ``"bias+silu"`` for a biased SiLU projection, ``"mul"`` with the
+pre-activated gate as ``operand`` for the up-projection of a gated MLP.
+``apply_epilogue`` is pure jnp so the exact same function serves as the Pallas
+in-kernel implementation, the fused-XLA fallback, and the test oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPILOGUE_STAGES = ("bias", "silu", "gelu", "residual", "mul")
+
+
+def parse_epilogue(epilogue: Optional[str]) -> Tuple[str, ...]:
+    """'bias+silu' → ('bias', 'silu'); None/'none'/'' → ()."""
+    if not epilogue or epilogue == "none":
+        return ()
+    stages = tuple(s.strip() for s in epilogue.split("+") if s.strip())
+    for s in stages:
+        if s not in EPILOGUE_STAGES:
+            raise ValueError(f"unknown epilogue stage {s!r}; valid: {EPILOGUE_STAGES}")
+    if stages.count("bias") > 1:
+        raise ValueError(f"epilogue {epilogue!r}: 'bias' may appear at most once")
+    if stages.count("residual") + stages.count("mul") > 1:
+        raise ValueError(
+            f"epilogue {epilogue!r}: at most one operand stage (residual|mul)")
+    return stages
+
+
+def epilogue_needs(stages: Sequence[str]) -> Tuple[bool, bool]:
+    """→ (needs_bias, needs_operand)."""
+    return "bias" in stages, ("residual" in stages or "mul" in stages)
+
+
+def apply_epilogue(y: jax.Array, stages: Sequence[str], *, bias=None,
+                   operand=None) -> jax.Array:
+    """Apply ``stages`` to the f32 accumulator ``y`` (shape (bm, bn)).
+
+    ``bias``: (1, bn); ``operand``: (bm, bn). Both are upcast to f32 here so
+    callers can stream them in their storage dtype.
+    """
+    for s in stages:
+        if s == "bias":
+            y = y + bias.astype(jnp.float32)
+        elif s == "silu":
+            y = y * jax.nn.sigmoid(y)
+        elif s == "gelu":
+            y = jax.nn.gelu(y, approximate=True)
+        elif s == "residual":
+            y = y + operand.astype(jnp.float32)
+        else:  # mul
+            y = y * operand.astype(jnp.float32)
+    return y
+
+
+def validate_epilogue(epilogue: Optional[str], bias, operand) -> Tuple[str, ...]:
+    """Parse ``epilogue`` and require bias/operand presence to match it.
+
+    Called at every dispatch entry point (all impls), so forgetting
+    ``epilogue='bias'`` while passing ``bias=`` fails loudly everywhere, not
+    just on the pallas path.
+    """
+    stages = parse_epilogue(epilogue)
+    needs_bias, needs_opd = epilogue_needs(stages)
+    if needs_bias != (bias is not None):
+        raise ValueError(
+            f"epilogue {epilogue!r} {'requires' if needs_bias else 'takes no'}"
+            f" bias= (got bias={'set' if bias is not None else 'None'})")
+    if needs_opd != (operand is not None):
+        raise ValueError(
+            f"epilogue {epilogue!r} {'requires' if needs_opd else 'takes no'}"
+            f" operand= (got operand={'set' if operand is not None else 'None'})")
+    return stages
+
+
+def split_extra_refs(stages: Sequence[str], extra: Sequence):
+    """Name the optional trailing (bias, operand) kernel refs/arrays."""
+    needs_bias, needs_opd = epilogue_needs(stages)
+    i = 0
+    bias = opd = None
+    if needs_bias:
+        bias = extra[i]
+        i += 1
+    if needs_opd:
+        opd = extra[i]
+        i += 1
+    assert i == len(extra), (stages, len(extra))
+    return bias, opd
+
+
+def flush_epilogue(acc_ref, sa_ref, sb_ref, o_ref, stages, extra) -> None:
+    """The shared kernel flush: Cartesian scale → epilogue stages → one
+    downcast store. Every CAMP kernel (unfused, w4, fused) must flush through
+    this exact expression chain — the ref-oracle bit-exactness tests assume
+    all five kernels agree on it.
+    """
+    scale = sa_ref[...] * sb_ref[...]  # (bm,1)*(1,bn) -> (bm,bn)
+    y = acc_ref[...].astype(jnp.float32) * scale
+    bias_ref, opd_ref = split_extra_refs(stages, extra)
+    y = apply_epilogue(y, stages,
+                       bias=None if bias_ref is None else bias_ref[...],
+                       operand=None if opd_ref is None else opd_ref[...])
+    o_ref[...] = y.astype(o_ref.dtype)

@@ -1,0 +1,34 @@
+"""Edge-block padding for the CAMP kernels.
+
+Pallas TPU grids want every dimension to be a whole number of blocks; real
+serving shapes (ragged batch rows, odd vocab slices, 1-token decode) are not.
+Rather than masking inside every kernel, the wrappers pad operands up to the
+block lattice in HBM-side jnp (XLA fuses the pad into the producing op) and
+slice the result back. Zero padding is semantically inert everywhere in the
+CAMP pipeline:
+
+* GEMM: zero rows/cols of A/B contribute nothing to the int32 accumulator.
+* rowwise quantization: extra zero K-columns do not change a row's absmax,
+  so quantized values — and therefore the fused kernels' in-VMEM scales —
+  are bit-identical to the unpadded computation.
+* scales are padded with 1.0 (not 0.0) so padded lanes stay finite.
+
+Padded output rows/cols are garbage by construction and are sliced away
+before returning.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def pad_2d(x: jax.Array, rows: int, cols: int, value=0) -> jax.Array:
+    """Pad a 2-D array up to (rows, cols) with ``value`` (no-op when equal)."""
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)), constant_values=value)

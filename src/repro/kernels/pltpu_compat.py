@@ -1,0 +1,14 @@
+"""Version-compat shims for ``jax.experimental.pallas.tpu``.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` in 0.4.x → ``CompilerParams`` in newer releases).
+Every kernel in this package imports the alias from here so the repo runs on
+either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

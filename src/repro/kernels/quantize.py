@@ -18,6 +18,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import INT4_QMAX, INT8_QMAX
+from repro.kernels.padding import pad_2d, round_up
 
 
 def _quantize_kernel(x_ref, q_ref, s_ref, *, qmax):
@@ -39,21 +40,21 @@ def quantize_rowwise_kernel(
 ):
     m, k = x.shape
     bm = min(block_m, m)
-    if m % bm:
-        raise ValueError(f"quantize_rowwise_kernel: M={m} not divisible by bm={bm}")
+    mp = round_up(m, bm)  # padded edge rows quantize to (q=0, scale=1)
+    x = pad_2d(x, mp, k)
     qmax = INT8_QMAX if bits == 8 else INT4_QMAX
     q, s = pl.pallas_call(
         functools.partial(_quantize_kernel, qmax=qmax),
-        grid=(m // bm,),
+        grid=(mp // bm,),
         in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((bm, k), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, k), jnp.int8),
-            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((mp, k), jnp.int8),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
-    return q, s
+    return q[:m], s[:m]

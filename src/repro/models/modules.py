@@ -6,8 +6,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.camp import camp_matmul
+from repro.core.camp import camp_matmul, weight_bits
 from repro.core.quant import QuantizedTensor
+from repro.kernels.epilogue import apply_epilogue, parse_epilogue
 from repro.parallel.sharding import logical
 
 
@@ -31,16 +32,42 @@ def group_norm_heads(x: jax.Array, scale: jax.Array, bias: jax.Array,
 
 
 def linear(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
-           qmode: str = "none", impl: str = "auto") -> jax.Array:
+           qmode: str = "none", impl: str = "auto",
+           epilogue: Optional[str] = None,
+           operand: Optional[jax.Array] = None) -> jax.Array:
     """``x @ W (+ b)`` — dispatches to the CAMP quantized pipeline when the
-    weight is a :class:`QuantizedTensor`."""
-    if isinstance(w, QuantizedTensor):
-        y = camp_matmul(x, w, qmode=(qmode if qmode != "none" else "w8a8"),
-                        impl=impl)
-    else:
-        y = jnp.matmul(x, w.astype(x.dtype))
+    weight is a :class:`QuantizedTensor`.
+
+    ``epilogue`` appends fused tail stages after the bias (e.g. ``'silu'``,
+    ``'gelu'``, ``'mul'``/``'residual'`` with ``operand``); on the quantized
+    path they run inside the kernel flush on the f32 accumulator, so the
+    activation never round-trips through HBM as a standalone elementwise op.
+    """
+    stages = []
     if bias is not None:
-        y = y + bias.astype(y.dtype)
+        stages.append("bias")
+    if epilogue and epilogue != "none":
+        stages.append(epilogue)
+    epi = "+".join(stages) if stages else "none"
+    if isinstance(w, QuantizedTensor):
+        # The weight's payload decides the kernel family: a caller-side qmode
+        # of 'none' (or one whose weight bits disagree with the stored
+        # payload, e.g. params quantized separately from cfg.qmode) is
+        # remapped to the mode matching the weight — keeping the requested
+        # activation treatment (weight-only stays weight-only).
+        if qmode == "none" or weight_bits(qmode) != w.bits:
+            if qmode.endswith("a16"):
+                qmode = "w8a16" if w.bits == 8 else "w4a16"
+            else:
+                qmode = "w8a8" if w.bits == 8 else "w4a8"
+        return camp_matmul(x, w, qmode=qmode, impl=impl, epilogue=epi,
+                           bias=bias, operand=operand)
+    y = jnp.matmul(x, w.astype(x.dtype))
+    if epi != "none":
+        y = apply_epilogue(
+            y.astype(jnp.float32), parse_epilogue(epi),
+            bias=None if bias is None else bias.reshape(1, -1),
+            operand=operand).astype(x.dtype)
     return y
 
 
@@ -63,10 +90,14 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 
 
 def gated_mlp(x: jax.Array, p: dict, *, qmode: str = "none") -> jax.Array:
-    """SiLU-gated FFN (llama-style): down(silu(gate(x)) * up(x))."""
-    g = linear(x, p["w_gate"], qmode=qmode)
-    u = linear(x, p["w_up"], qmode=qmode)
-    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    """SiLU-gated FFN (llama-style): down(silu(gate(x)) * up(x)).
+
+    Three fused kernel calls, zero standalone elementwise ops: the gate
+    projection applies SiLU in its flush, the up projection multiplies by the
+    activated gate in *its* flush, and the down projection is plain.
+    """
+    g = linear(x, p["w_gate"], qmode=qmode, epilogue="silu")
+    h = linear(x, p["w_up"], qmode=qmode, epilogue="mul", operand=g)
     h = logical(h, "batch", "seq", "d_ff")
     return linear(h, p["w_down"], qmode=qmode)
 

@@ -36,6 +36,51 @@ def init_serve_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+_QMODE_KIND = {"w8a8": "i8", "w4a8": "w4", "w4a4": "a4w4"}
+
+
+def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
+                       prefill_len: int = 0, measure=None):
+    """Pre-tune CAMP GEMM blocks for the dense transformer linears.
+
+    Decode runs one token per sequence (M = batch) and prefill runs
+    M = batch × prompt_len; both hit the same (K, N) weight shapes. Tuning
+    them here — measured on a live TPU, analytic elsewhere — populates the
+    persistent autotune cache so the request path never tunes. Covered:
+    attention q/kv/out, dense MLP up/gate/down, and the untied lm head.
+    Mixer-specific extras (SSM/RWKV projections) and MoE experts are not
+    enumerated — the former cold-tune on first sight (instant off-TPU), the
+    latter run through einsum, not the CAMP GEMM cache.
+
+    Returns [((m, n, k), (bm, bn, bk)), ...] for logging.
+    """
+    kind = _QMODE_KIND.get(cfg.qmode)
+    if kind is None:  # 'none' / weight-only: bf16 matmul, nothing to tune
+        return []
+    import jax.numpy as jnp
+    from repro.core import autotune
+    a_in_bytes = jnp.dtype(cfg.dtype).itemsize  # must match the request path
+    d, hd = cfg.d_model, cfg.hd
+    proj = {
+        (d, hd * cfg.n_heads), (d, hd * cfg.n_kv_heads),   # q / kv proj
+        (hd * cfg.n_heads, d),                             # attn out
+        (d, cfg.d_ff), (cfg.d_ff, d),                      # mlp up/gate/down
+    }
+    if not cfg.tie_embeddings:
+        proj.add((d, cfg.vocab_size))                      # quantized lm head
+    ms = sorted({b * max(prefill_len, 1) for b in batch_sizes} |
+                set(batch_sizes))
+    out = []
+    for m in ms:
+        for (k, n) in sorted(proj):
+            blk = autotune.tune(kind, m, n, k, fused=True,
+                                a_in_bytes=a_in_bytes, measure=measure,
+                                save=False)
+            out.append(((m, n, k), blk))
+    autotune.flush()  # one disk write for the whole warmup
+    return out
+
+
 def build_prefill_step(cfg: ModelConfig, *, max_len: Optional[int] = None):
     """(params, inputs, caches) → (last_token_logits, caches)."""
 

@@ -1,0 +1,102 @@
+"""Autotuned block selection + blocking arithmetic."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.blocking import MXU, VMEM_BYTES, BlockConfig, choose_blocks
+
+
+def test_vmem_bytes_is_plain_bits_to_bytes():
+    b = BlockConfig(bm=128, bn=256, bk=512)
+    # 8-bit A and B: 1 byte/element, double-buffered; +int32 acc +f32 out.
+    assert b.vmem_bytes(8, 8) == 2 * (128 * 512 + 512 * 256) + 2 * 4 * 128 * 256
+    # 4-bit weights halve the B stream.
+    assert b.vmem_bytes(4, 8) == 2 * (128 * 512 + 512 * 256 // 2) + 2 * 4 * 128 * 256
+    # 4-bit activations halve the A stream.
+    assert b.vmem_bytes(8, 4) == 2 * (128 * 512 // 2 + 512 * 256) + 2 * 4 * 128 * 256
+    assert b.vmem_bytes(4, 4) == 2 * ((128 * 512 + 512 * 256) // 2) + 2 * 4 * 128 * 256
+
+
+def test_candidates_fit_budget_and_include_seed():
+    for kind in autotune.KINDS:
+        for (m, n, k) in [(4096, 4096, 4096), (16, 8192, 8192), (129, 333, 130)]:
+            cands = autotune.candidates(kind, m, n, k)
+            assert cands, (kind, m, n, k)
+            seed = choose_blocks(m, n, k)
+            for (bm, bn, bk) in cands:
+                assert bm <= m and bn <= n and bk <= k
+                if kind != "i8":
+                    assert bk % 2 == 0
+            # the analytic seed (possibly evened) is always explored
+            assert any(bm == seed.bm and bn == seed.bn for (bm, bn, bk) in cands)
+
+
+def test_model_time_monotone_in_work():
+    small = autotune.model_time_s("i8", 128, 128, 128, (128, 128, 128))
+    big = autotune.model_time_s("i8", 4096, 4096, 4096, (256, 256, 512))
+    assert big > small
+
+
+def test_fused_model_removes_activation_restream():
+    # Prefill-shaped GEMM, many j-columns: unfused re-reads the int8 A per
+    # column block; fused streams the A row panel once. The model must see it.
+    m, n, k = 512, 8192, 4096
+    blk = (256, 256, 512)
+    t_fused = autotune.model_time_s("i8", m, n, k, blk, fused=True, a_in_bytes=2)
+    t_unfused = autotune.model_time_s("i8", m, n, k, blk, fused=False)
+    assert t_fused < t_unfused
+
+
+def test_get_blocks_caches_and_persists(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    blk = autotune.get_blocks("i8", 512, 512, 512)
+    assert os.path.exists(cache)
+    data = json.load(open(cache))
+    assert len(data) == 1
+    (entry,) = data.values()
+    assert tuple(entry["block"]) == blk
+    assert entry["source"] == "model"  # CPU backend → analytic fallback
+    # warm in-memory hit and cold-process disk hit both return the same block
+    assert autotune.get_blocks("i8", 512, 512, 512) == blk
+    autotune.clear_cache()
+    assert autotune.get_blocks("i8", 512, 512, 512) == blk
+    autotune.clear_cache()
+
+
+def test_tune_with_custom_timer_picks_argmin(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    autotune.clear_cache()
+    cands = autotune.candidates("i8", 1024, 1024, 1024)
+    want = cands[-1]
+    blk = autotune.tune("i8", 1024, 1024, 1024,
+                        timer=lambda b: 0.0 if b == want else 1.0)
+    assert blk == want
+    assert autotune.get_blocks("i8", 1024, 1024, 1024) == want
+    autotune.clear_cache()
+
+
+def test_gemm_autotuned_default_blocks_run(tmp_path, monkeypatch):
+    """ops.gemm_* with block=None (the default) must pick blocks that run —
+    including shapes that are not multiples of anything in particular."""
+    from repro.kernels import ops, ref
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    autotune.clear_cache()
+    rng = np.random.default_rng(5)
+    m, k, n = 130, 260, 70
+    a = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
+    sa = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)).astype(np.float32))
+    sb = jnp.asarray(rng.uniform(0.005, 0.02, (1, n)).astype(np.float32))
+    got = ops.gemm_i8(a, b, sa, sb, impl="pallas")  # block=None → autotune
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.gemm_i8_ref(a, b, sa, sb)))
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y = ops.gemm_i8_fused(x, b, sb, impl="pallas")
+    assert y.shape == (m, n)
+    autotune.clear_cache()

@@ -1,0 +1,239 @@
+"""Fused quantize-in-kernel GEMM family vs the ref-oracle composition.
+
+The contract under test (ISSUE 1 acceptance):
+
+* fused w8a8 is **bit-identical** to the unfused
+  ``quantize_rowwise`` → ``camp_gemm_i8`` pallas composition on
+  block-divisible shapes (same for w4a8 / w4a4 against their compositions),
+* fused epilogue math matches ``ref`` + XLA epilogue to f32 tolerance,
+* non-block-divisible (M, N, K) go through the padded edge-block path and
+  still match the oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels import ops, ref
+from repro.kernels.camp_gemm import camp_gemm_i8
+from repro.kernels.camp_gemm_fused import (camp_gemm_fused_w4a4,
+                                           camp_gemm_fused_w4a8,
+                                           camp_gemm_fused_w8a8)
+from repro.kernels.camp_gemm_w4 import camp_gemm_a4w4, camp_gemm_w4
+from repro.kernels.epilogue import apply_epilogue, parse_epilogue
+from repro.kernels.quantize import quantize_rowwise_kernel
+
+RNG = np.random.default_rng(123)
+
+# (M, K, N): one divisible, one fully non-divisible, one tiny decode row.
+SHAPES = [(64, 128, 64), (50, 200, 72), (3, 96, 40)]
+EPILOGUES = ["none", "bias", "silu", "gelu", "bias+silu", "residual", "mul",
+             "bias+gelu+residual"]
+QMODES = ["w8a8", "w4a8", "w4a4"]
+BLOCK = (32, 32, 64)
+
+
+def _fused_fn(qmode):
+    return {"w8a8": camp_gemm_fused_w8a8, "w4a8": camp_gemm_fused_w4a8,
+            "w4a4": camp_gemm_fused_w4a4}[qmode]
+
+
+def _oracle(qmode, x, wq, stages, bias, operand):
+    """ref quantize + ref GEMM + XLA epilogue, all in f32."""
+    a_bits = 4 if qmode == "w4a4" else 8
+    a_q, a_s = ref.quantize_rowwise_ref(x, a_bits)
+    if qmode == "w8a8":
+        y = ref.gemm_i8_ref(a_q, wq.q, a_s, wq.scale)
+    else:
+        y = ref.gemm_w4_ref(a_q, wq.q, a_s, wq.scale)
+    return apply_epilogue(np.asarray(y), stages,
+                          bias=None if bias is None else np.asarray(bias)[None],
+                          operand=None if operand is None else np.asarray(operand))
+
+
+@pytest.mark.parametrize("qmode", QMODES)
+@pytest.mark.parametrize("epilogue", EPILOGUES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_matches_ref_oracle(qmode, epilogue, shape):
+    m, k, n = shape
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((k, n)).astype(np.float32))
+    wq = quant.quantize_weight(w, 4 if qmode.startswith("w4") else 8)
+    stages = parse_epilogue(epilogue)
+    bias = operand = None
+    if "bias" in stages:
+        bias = jnp.asarray(RNG.standard_normal(n).astype(np.float32))
+    if "residual" in stages or "mul" in stages:
+        operand = jnp.asarray(RNG.standard_normal((m, n)).astype(np.float32))
+    want = _oracle(qmode, x, wq, stages, bias, operand)
+    bm, bn, bk = BLOCK
+    got = _fused_fn(qmode)(x, wq.q, wq.scale, block_m=bm, block_n=bn,
+                           block_k=bk, epilogue=epilogue, bias=bias,
+                           operand=operand, interpret=True)
+    # f32 tolerance: the jitted kernel's scale division can differ from the
+    # eager oracle's by 1 ULP (documented in test_kernels.py); the int math
+    # itself is exact.
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("qmode", QMODES)
+def test_fused_bit_identical_to_unfused_composition(qmode):
+    """On divisible shapes the fused kernel must reproduce the two-kernel
+    pallas composition bit for bit — the in-VMEM quantize is the same f32
+    expression chain as the standalone quantize kernel."""
+    m, k, n = 128, 256, 128
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((k, n)).astype(np.float32))
+    bm, bn, bk = 64, 64, 64
+    if qmode == "w8a8":
+        wq = quant.quantize_weight(w, 8)
+        a_q, a_s = quantize_rowwise_kernel(x, bits=8, block_m=bm, interpret=True)
+        want = camp_gemm_i8(a_q, wq.q, a_s, wq.scale, block_m=bm, block_n=bn,
+                            block_k=bk, interpret=True)
+    elif qmode == "w4a8":
+        wq = quant.quantize_weight(w, 4)
+        a_q, a_s = quantize_rowwise_kernel(x, bits=8, block_m=bm, interpret=True)
+        want = camp_gemm_w4(a_q, wq.q, a_s, wq.scale, block_m=bm, block_n=bn,
+                            block_k=bk, interpret=True)
+    else:
+        wq = quant.quantize_weight(w, 4)
+        a_q, a_s = quantize_rowwise_kernel(x, bits=4, block_m=bm, interpret=True)
+        a_packed = quant.pack_int4(a_q.T).T
+        want = camp_gemm_a4w4(a_packed, wq.q, a_s, wq.scale, block_m=bm,
+                              block_n=bn, block_k=bk, interpret=True)
+    got = _fused_fn(qmode)(x, wq.q, wq.scale, block_m=bm, block_n=bn,
+                           block_k=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_bf16_activations():
+    m, k, n = 48, 192, 64
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.bfloat16)
+    wq = quant.quantize_weight(
+        jnp.asarray(RNG.standard_normal((k, n)).astype(np.float32)), 8)
+    # Bit-identical to the jitted two-kernel composition (both sides compute
+    # the scale with the same jitted division)...
+    a_q, a_s = quantize_rowwise_kernel(x, bits=8, block_m=16, interpret=True)
+    want = camp_gemm_i8(a_q, wq.q, a_s, wq.scale, block_m=16, block_n=32,
+                        block_k=64, interpret=True)
+    got = camp_gemm_fused_w8a8(x, wq.q, wq.scale, block_m=16, block_n=32,
+                               block_k=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ...and within quantization-flip distance of the eager ref composition:
+    # a 1-ULP scale difference can flip a borderline rounding, and one flipped
+    # int8 in row i moves every output of that row by |b_kj|·sa·sb ≤ 127·sa·sb.
+    a_r, s_r = ref.quantize_rowwise_ref(x, 8)
+    ref_out = np.asarray(ref.gemm_i8_ref(a_r, wq.q, s_r, wq.scale))
+    step = np.asarray(s_r) * np.asarray(wq.scale)
+    assert (np.abs(np.asarray(got) - ref_out) <= 2 * 127 * step + 1e-5).all()
+
+
+@pytest.mark.parametrize("shape", [(100, 200, 72), (60, 100, 40), (7, 30, 130)])
+def test_unfused_kernels_padded_edge_blocks(shape):
+    """The unfused kernels accept arbitrary (M, N, K) via zero padding."""
+    m, k, n = shape
+    a = jnp.asarray(RNG.integers(-127, 128, (m, k)).astype(np.int8))
+    sa = jnp.asarray(RNG.uniform(0.005, 0.02, (m, 1)).astype(np.float32))
+    sb = jnp.asarray(RNG.uniform(0.005, 0.02, (1, n)).astype(np.float32))
+    b = jnp.asarray(RNG.integers(-127, 128, (k, n)).astype(np.int8))
+    got = camp_gemm_i8(a, b, sa, sb, block_m=64, block_n=64, block_k=64,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.gemm_i8_ref(a, b, sa, sb)))
+    b4 = jnp.asarray(RNG.integers(-7, 8, (k, n)).astype(np.int8))
+    bp = quant.pack_int4(b4)
+    got = camp_gemm_w4(a, bp, sa, sb, block_m=64, block_n=64, block_k=64,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.gemm_w4_ref(a, bp, sa, sb)))
+    a4 = RNG.integers(-7, 8, (m, k)).astype(np.int8)
+    ap = quant.pack_int4(jnp.asarray(a4).T).T
+    got = camp_gemm_a4w4(ap, bp, sa, sb, block_m=64, block_n=64, block_k=64,
+                         interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.gemm_a4w4_ref(ap, bp, k, sa, sb)))
+
+
+def test_quantize_kernel_padded_rows():
+    x = jnp.asarray(RNG.standard_normal((100, 48)).astype(np.float32))
+    q, s = ops.quantize_rowwise(x, impl="pallas", block_m=64)
+    q_r, s_r = ref.quantize_rowwise_ref(x, 8)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=2e-7)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_ops_fused_dispatch_all_kinds(impl):
+    rng = np.random.default_rng(7)  # fixed data: tolerances are per-dataset
+    m, k, n = 32, 128, 48
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    exact = np.asarray(x @ w)
+    tol = {"w8a8": 0.02, "w4a8": 0.2, "w4a4": 0.35}
+    fns = {"w8a8": ops.gemm_i8_fused, "w4a8": ops.gemm_w4_fused,
+           "w4a4": ops.gemm_a4w4_fused}
+    for qmode, fn in fns.items():
+        wq = quant.quantize_weight(w, 4 if qmode.startswith("w4") else 8)
+        y = np.asarray(fn(x, wq.q, wq.scale, impl=impl,
+                          block=(16, 16, 64) if impl == "pallas" else None))
+        err = np.abs(y - exact).max() / np.abs(exact).max()
+        assert err < tol[qmode], (qmode, impl, err)
+
+
+def test_epilogue_parse_validation():
+    assert parse_epilogue(None) == ()
+    assert parse_epilogue("none") == ()
+    assert parse_epilogue("bias+silu") == ("bias", "silu")
+    with pytest.raises(ValueError):
+        parse_epilogue("bias+swish")
+    with pytest.raises(ValueError):
+        parse_epilogue("residual+mul")  # two operand stages
+    with pytest.raises(ValueError):
+        parse_epilogue("bias+bias")
+    with pytest.raises(ValueError):
+        # stages demand tensors the caller didn't pass
+        camp_gemm_i8(jnp.zeros((8, 8), jnp.int8), jnp.zeros((8, 8), jnp.int8),
+                     jnp.ones((8, 1)), jnp.ones((1, 8)), epilogue="bias",
+                     interpret=True)
+
+
+@pytest.mark.parametrize("impl", ["xla", "ref", "hybrid", "pallas"])
+def test_ops_reject_orphan_bias_on_every_impl(impl):
+    """bias= without epilogue='bias' must raise on ALL impls, not just pallas
+    (a silently dropped bias on the CPU fallback would only crash on TPU)."""
+    a = jnp.zeros((8, 8), jnp.int8)
+    b = jnp.zeros((8, 8), jnp.int8)
+    sa, sb = jnp.ones((8, 1)), jnp.ones((1, 8))
+    with pytest.raises(ValueError):
+        ops.gemm_i8(a, b, sa, sb, impl=impl, bias=jnp.ones(8),
+                    block=(8, 8, 8))
+    with pytest.raises(ValueError):
+        ops.gemm_i8(a, b, sa, sb, impl=impl, epilogue="mul",
+                    block=(8, 8, 8))  # operand stage without operand
+
+
+def test_fused_hybrid_impl_is_exact_and_actually_hybrid():
+    """impl='hybrid' on the fused path must run the §3 decomposition (exact
+    vs the int32 dot) rather than silently falling back to plain XLA."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    for qmode, fn in (("w8a8", ops.gemm_i8_fused), ("w4a8", ops.gemm_w4_fused)):
+        wq = quant.quantize_weight(w, 4 if qmode == "w4a8" else 8)
+        got = fn(x, wq.q, wq.scale, impl="hybrid")
+        want = fn(x, wq.q, wq.scale, impl="xla")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_linear_preserves_weight_only_qmode_on_bit_mismatch():
+    """A weight-only request must never be downgraded to an activation-
+    quantized integer mode just because the stored weight bits differ."""
+    from repro.core import camp
+    from repro.models.modules import linear
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    wq4 = camp.prepare_weight(w, "w4a16")
+    got = linear(x, wq4, qmode="w8a16")  # wrong weight bits, still 'a16'
+    want = camp.camp_matmul(x, wq4, qmode="w4a16")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,7 +1,14 @@
-"""Hypothesis property tests for the system's numeric invariants."""
+"""Hypothesis property tests for the system's numeric invariants.
+
+``hypothesis`` is an optional dev dependency (see requirements-dev.txt); this
+module skips cleanly when it is absent instead of erroring test collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import camp, hybrid, quant
