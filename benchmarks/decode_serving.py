@@ -1,0 +1,122 @@
+"""Decode serving: dense-bf16 vs dense-int8 vs paged-int8 KV caches.
+
+Two numbers per (cache kind, batch), following benchmarks/common.py:
+
+* measured — wall-clock tokens/s of the real serving path on THIS host
+  (XLA-CPU): the dense slab loop for the dense kinds, the
+  continuous-batching engine + paged-attention reference for paged-int8.
+  CPU numbers validate correctness-at-speed, not the roofline claim.
+* modeled — v5e HBM bytes per decode step. Decode attention re-reads the
+  cache every token, so bytes/step is the roofline term that matters:
+  dense kinds stream the whole (B, max_len) slab (bf16: 2 B/elt, int8:
+  1 B/elt + per-page scales); paged-int8 streams only the pages sequences
+  actually occupy (block-table gather) plus the one-page requantize
+  write-back per appended token.
+
+Emits ``BENCH_decode.json`` at the repo root so the serving-roofline
+trajectory is recorded run over run. The headline acceptance ratio is
+``paged-int8 / dense-bf16`` modeled bytes at batch 8.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+
+BATCHES = (1, 8, 32)
+PROMPT = 32
+STEPS = 8
+MAX_LEN = 256           # dense slab allocation (what the slab path streams)
+PAGE_SIZE = 16
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_decode.json")
+
+
+def _cfg():
+    from repro.configs import get_config
+    return get_config("qwen2-0.5b", n_layers=4, d_model=256, n_heads=4,
+                      n_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=8192,
+                      max_seq_len=MAX_LEN)
+
+
+def modeled_bytes_step(cfg, batch: int, kind: str, *, mean_len: float,
+                       page_size: int = PAGE_SIZE) -> float:
+    """v5e HBM cache traffic for ONE ragged decode step (all layers, k+v)."""
+    kv, hd, nl = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    per_tok = kv * hd                                 # elements per (k or v)
+    if kind == "dense-bf16":
+        read = batch * nl * 2 * per_tok * MAX_LEN * 2
+        write = batch * nl * 2 * per_tok * 2          # append one token
+    elif kind == "dense-int8":
+        scales = batch * nl * 2 * kv * (MAX_LEN // page_size) * 4
+        read = batch * nl * 2 * per_tok * MAX_LEN * 1 + scales
+        # append requantizes the touched page in place
+        write = batch * nl * 2 * (per_tok * page_size * 1 + kv * 4)
+    elif kind == "paged-int8":
+        pages = mean_len / page_size + 0.5            # half-empty last page
+        read = batch * nl * 2 * (per_tok * page_size * 1 + kv * 4) * pages
+        read += batch * nl * np.ceil(mean_len / page_size) * 4  # block table
+        write = batch * nl * 2 * (per_tok * page_size * 1 + kv * 4)
+    else:
+        raise ValueError(kind)
+    return float(read + write)
+
+
+def _measure_tok_s(cfg, params, batch: int, kind: str) -> float:
+    import jax.numpy as jnp
+
+    from repro.serving.engine import _generate_dense, generate
+    prompt = jax.random.randint(jax.random.PRNGKey(batch), (batch, PROMPT),
+                                0, cfg.vocab_size)
+    import time
+    if kind == "paged-int8":
+        call = lambda: generate(params, cfg, prompt, steps=STEPS,  # noqa: E731
+                                kv_dtype="int8", page_size=PAGE_SIZE)
+    else:
+        kv_dtype = "int8" if kind == "dense-int8" else None
+        call = lambda: _generate_dense(  # noqa: E731
+            params, cfg, prompt, steps=STEPS, key=None, sample="greedy",
+            temperature=1.0, max_len=MAX_LEN, kv_dtype=kv_dtype)
+    jax.block_until_ready(call())          # warm (compile/trace)
+    t0 = time.perf_counter()
+    toks = call()
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    return batch * STEPS / dt
+
+
+def rows():
+    from repro.models import init_params
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mean_len = PROMPT + STEPS / 2
+    report = {"bench": "decode_serving", "prompt": PROMPT, "steps": STEPS,
+              "max_len": MAX_LEN, "page_size": PAGE_SIZE, "batches": []}
+    for batch in BATCHES:
+        entry = {"batch": batch, "kinds": {}}
+        base = modeled_bytes_step(cfg, batch, "dense-bf16", mean_len=mean_len)
+        for kind in ("dense-bf16", "dense-int8", "paged-int8"):
+            by = modeled_bytes_step(cfg, batch, kind, mean_len=mean_len)
+            tok_s = _measure_tok_s(cfg, params, batch, kind)
+            entry["kinds"][kind] = {
+                "measured_tok_s": tok_s,
+                "modeled_hbm_bytes_step": by,
+                "ratio_vs_dense_bf16": by / base,
+            }
+            yield csv_row(
+                f"decode_serving/b{batch}/{kind}", 1e6 / tok_s,
+                f"{tok_s:.1f} tok/s; modeled {by / 1e6:.3f} MB/step "
+                f"(x{by / base:.3f} of dense-bf16)")
+        report["batches"].append(entry)
+    b8 = next(e for e in report["batches"] if e["batch"] == 8)
+    ratio = b8["kinds"]["paged-int8"]["ratio_vs_dense_bf16"]
+    report["paged_int8_vs_dense_bf16_at_b8"] = ratio
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    yield f"# paged-int8 / dense-bf16 modeled bytes at b8: {ratio:.3f}"
+    yield f"# wrote {os.path.normpath(_JSON_PATH)}"

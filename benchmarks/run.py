@@ -10,9 +10,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (blocking_locality, cnn_llm_layers, fused_gemm,
-                            instruction_count, roofline, table1_smm,
-                            table4_conv)
+    from benchmarks import (blocking_locality, cnn_llm_layers, decode_serving,
+                            fused_gemm, instruction_count, roofline,
+                            table1_smm, table4_conv)
     sections = [
         ("Table 1 (SMM 512 speedups)", table1_smm.rows),
         ("Fig 1 (blocking locality)", blocking_locality.rows),
@@ -21,6 +21,7 @@ def main() -> None:
         ("Fig 17 (instruction count)", instruction_count.rows),
         ("Roofline (dry-run artifacts)", roofline.rows),
         ("Fused quantize+GEMM (ISSUE 1)", fused_gemm.rows),
+        ("Paged-KV decode serving (ISSUE 2)", decode_serving.rows),
     ]
     print("name,us_per_call,derived")
     ok = True

@@ -24,6 +24,7 @@ cache answers).
 from __future__ import annotations
 
 import json
+import math
 import os
 import threading
 import time
@@ -298,6 +299,58 @@ def tune(kind: str, m: int, n: int, k: int, *, fused: bool = False,
         if save:
             _save_disk()
     return best
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention page-size tuning (same persistent cache, its own key space)
+# ---------------------------------------------------------------------------
+PAGE_SIZES = (8, 16, 32, 64, 128)
+
+
+def model_paged_decode_time_s(batch: int, kv_heads: int, head_dim: int,
+                              mean_len: int, page_size: int) -> float:
+    """Analytic v5e time for one layer's paged int8 decode-attention step.
+
+    HBM term: each sequence streams its occupied pages (k+v int8 + per-page
+    f32 scales); the expected half-empty last page charges fragmentation to
+    large pages. Overhead term: one grid step per (seq, kv head, page)
+    charges the per-step issue cost to small pages.
+    """
+    pages = mean_len / page_size + 0.5
+    page_bytes = 2 * page_size * head_dim + 2 * 4          # int8 k+v + scales
+    hbm = batch * kv_heads * pages * page_bytes
+    steps = batch * kv_heads * math.ceil(mean_len / page_size + 0.5)
+    return hbm / _HBM_BW + steps * _STEP_OVERHEAD_S
+
+
+def get_page_size(kv_heads: int, head_dim: int, mean_len: int,
+                  batch: int = 8, *, timer: Optional[Callable] = None,
+                  save: bool = True) -> int:
+    """Cached KV page-size pick for a serving shape; tunes on first sight.
+
+    Lives in the same JSON cache as the GEMM blocks (its own ``pattn|`` key
+    space), so a pool size tuned by one serving process is reused by the
+    next. ``timer`` overrides the analytic scorer (tests use this).
+    """
+    key = (f"pattn|kv{kv_heads}|hd{head_dim}|len{mean_len}|b{batch}"
+           f"|{_backend()}")
+    with _lock:
+        _load_disk()
+        hit = _mem_cache.get(key)
+    if hit is not None:
+        return int(hit["page_size"])
+    score = timer or (lambda ps: model_paged_decode_time_s(
+        batch, kv_heads, head_dim, mean_len, ps))
+    scores = {ps: score(ps) for ps in PAGE_SIZES}
+    best = min(scores, key=scores.get)
+    with _lock:
+        _load_disk()
+        _mem_cache[key] = {"page_size": int(best),
+                           "source": "timer" if timer else "model",
+                           "t_us": scores[best] * 1e6}
+        if save:
+            _save_disk()
+    return int(best)
 
 
 def get_blocks(kind: str, m: int, n: int, k: int, *, fused: bool = False,

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core import hybrid as _hybrid
+from repro.core.quant import unpack_int4
 from repro.kernels import ref as _ref
 from repro.kernels.camp_gemm import camp_gemm_i8 as _pallas_i8
 from repro.kernels.camp_gemm_fused import camp_gemm_fused_w4a4 as _pallas_f_a4w4
@@ -115,7 +116,6 @@ def gemm_w4(a_q, b_packed, a_scale, b_scale, *, out_dtype=jnp.float32,
                           block_n=bn, block_k=bk, out_dtype=out_dtype,
                           epilogue=epilogue, bias=bias, operand=operand,
                           interpret=not _on_tpu())
-    from repro.core.quant import unpack_int4
     b_q = unpack_int4(b_packed, k)
     if impl == "hybrid":
         acc = _hybrid.hybrid_matmul_w4a8(a_q, b_q)
@@ -138,7 +138,6 @@ def gemm_a4w4(a_packed, b_packed, k, a_scale, b_scale, *,
                             block_n=bn, block_k=bk, out_dtype=out_dtype,
                             epilogue=epilogue, bias=bias, operand=operand,
                             interpret=not _on_tpu())
-    from repro.core.quant import unpack_int4
     a_q = unpack_int4(a_packed.T, k).T
     b_q = unpack_int4(b_packed, k)
     acc = _ref.dot_i32(a_q, b_q)
@@ -169,7 +168,6 @@ def _fused_fallback(x, b, b_scale, bias, operand, *, a_bits, w4, hybrid,
     decomposition so ``impl='hybrid'`` keeps its meaning on the fused path.
     """
     if w4:
-        from repro.core.quant import unpack_int4
         b = unpack_int4(b, x.shape[-1])
     a_q, a_s = _ref.quantize_rowwise_ref(x, a_bits)
     if hybrid:

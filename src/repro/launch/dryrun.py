@@ -74,6 +74,7 @@ def batch_specs(cfg: ModelConfig, batch: int, seq: int, rules, mesh):
 _CACHE_AXES = {
     "k": ("batch", "kv_heads", "seq_kv", None),
     "v": ("batch", "kv_heads", "seq_kv", None),
+    "kv_scale": ("batch", "kv_heads", None),
     "h": ("batch", "ssm_inner", None),
     "conv": ("batch", None, "ssm_inner"),
     "s": ("batch", "heads", None, None),
@@ -82,11 +83,19 @@ _CACHE_AXES = {
 
 
 def cache_pspecs(tree, rules, mesh):
+    from repro.serving.kv_cache import DenseKVCache
+
     def walk(node, name=None):
         if isinstance(node, dict):
             return {k: walk(v, k) for k, v in node.items()}
         if isinstance(node, list):
             return [walk(v) for v in node]
+        if isinstance(node, DenseKVCache):
+            opt = lambda x: None if x is None else walk(x, "kv_scale")  # noqa: E731
+            return DenseKVCache(k=walk(node.k, "k"), v=walk(node.v, "v"),
+                                k_scale=opt(node.k_scale),
+                                v_scale=opt(node.v_scale),
+                                page_size=node.page_size)
         names = _CACHE_AXES.get(name, (None,) * len(node.shape))
         return NamedSharding(mesh, spec_for(node.shape, names, rules, mesh))
     return walk(tree)

@@ -7,6 +7,17 @@ Causal prefill at 32k uses **q-chunking** (python-unrolled, so the multi-pod
 dry-run's cost analysis sees every FLOP): each (B, chunk, ...) q-slice attends
 to the full KV — exact, no online-softmax state, peak memory ∝ chunk × T
 instead of T × T.
+
+KV caching goes through :mod:`repro.serving.kv_cache`:
+
+* :class:`~repro.serving.kv_cache.DenseKVCache` — the (B, max_len) slab
+  (training/prefill and the legacy batched decode path). int8 slabs carry
+  per-page dynamic scales; all conversion lives in the cache module.
+* :class:`~repro.serving.kv_cache.PagedDecodeCache` — a page-pool view used
+  by the continuous-batching engine: append goes to block-table pages and
+  attention runs the paged int8 decode kernel
+  (:mod:`repro.kernels.paged_attention`), so the quantized cache is never
+  materialized as f32 in HBM.
 """
 from __future__ import annotations
 
@@ -15,28 +26,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention import paged_attention
 from repro.models.config import ModelConfig
 from repro.models.modules import apply_rope, linear, rms_norm, rope_freqs
 from repro.parallel.sharding import logical
+from repro.serving.kv_cache import (DEFAULT_PAGE_SIZE, DenseKVCache,
+                                    PagedDecodeCache)
 
 _NEG = -1e30
-
-# int8 KV-cache fixed-point scale (CAMP storage idea applied to the cache):
-# rope'd keys and values are O(1); |x| ≤ 3.96 representable, step 1/32.
-KV_INT8_SCALE = 1.0 / 32.0
-
-
-def _to_cache_dtype(x: jax.Array, cache_dtype) -> jax.Array:
-    if cache_dtype == jnp.int8:
-        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_INT8_SCALE),
-                        -127, 127).astype(jnp.int8)
-    return x.astype(cache_dtype)
-
-
-def _from_cache_dtype(x: jax.Array, out_dtype) -> jax.Array:
-    if x.dtype == jnp.int8:
-        return (x.astype(jnp.float32) * KV_INT8_SCALE).astype(out_dtype)
-    return x.astype(out_dtype)
 
 
 def init_attention(key, cfg: ModelConfig, dtype) -> dict:
@@ -81,13 +78,15 @@ def _grouped_attn(q, k, v, q_pos, k_pos, *, k_len: Optional[jax.Array] = None):
 
 
 def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-              *, cache: Optional[dict] = None,
-              cache_pos: Optional[jax.Array] = None, qmode: str = "none"):
+              *, cache=None, cache_pos: Optional[jax.Array] = None,
+              qmode: str = "none"):
     """x: (B, S, D). Returns (y, new_cache).
 
-    * cache None                       → full causal self-attention (train).
-    * cache given, S > 1               → prefill: attend + fill cache[0:S].
-    * cache given, S == 1, cache_pos   → decode: append + attend over prefix.
+    * cache None                        → full causal self-attention (train).
+    * DenseKVCache, S > 1               → prefill: attend + fill cache[0:S].
+    * DenseKVCache, S == 1, cache_pos   → decode: append + attend over prefix.
+    * PagedDecodeCache, S == 1          → ragged decode: append to block-table
+      pages + paged int8 attention (per-sequence positions, no cache_pos).
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -108,6 +107,17 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     k = logical(k, "batch", "seq", "kv_heads", "head_dim")
     v = logical(v, "batch", "seq", "kv_heads", "head_dim")
 
+    if isinstance(cache, PagedDecodeCache):
+        assert s == 1, "paged cache is decode-only (one token per sequence)"
+        new_cache = cache.append(jnp.swapaxes(k, 1, 2)[:, :, 0],
+                                 jnp.swapaxes(v, 1, 2)[:, :, 0])
+        ctx = paged_attention(q.reshape(b, kv, g, hd), new_cache.k_pages,
+                              new_cache.v_pages, new_cache.k_scale,
+                              new_cache.v_scale, new_cache.tables,
+                              new_cache.lengths)
+        y = linear(ctx.reshape(b, 1, h * hd), p["wo"], qmode=qmode)
+        return y, new_cache
+
     new_cache = None
     if cache is None:
         k_all, v_all, k_pos, k_len = k, v, positions[0], None
@@ -115,24 +125,13 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         k_t = jnp.swapaxes(k, 1, 2)                              # (B,KV,S,hd)
         v_t = jnp.swapaxes(v, 1, 2)
         if s > 1:   # prefill from position 0
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], _to_cache_dtype(k_t, cache["k"].dtype), (0, 0, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], _to_cache_dtype(v_t, cache["v"].dtype), (0, 0, 0, 0))
-            new_cache = {"k": ck, "v": cv}
+            new_cache = cache.write_prefill(k_t, v_t)
             k_all, v_all, k_pos, k_len = k, v, positions[0], None
         else:       # decode: append at cache_pos, attend over whole cache
-            pos = cache_pos
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], _to_cache_dtype(k_t, cache["k"].dtype), (0, 0, pos, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], _to_cache_dtype(v_t, cache["v"].dtype), (0, 0, pos, 0))
-            new_cache = {"k": ck, "v": cv}
-            t = ck.shape[2]
-            k_all = _from_cache_dtype(jnp.swapaxes(ck, 1, 2), x.dtype)  # (B,T,KV,hd)
-            v_all = _from_cache_dtype(jnp.swapaxes(cv, 1, 2), x.dtype)
-            k_pos = jnp.arange(t)
-            k_len = pos + 1
+            new_cache = cache.append(k_t, v_t, cache_pos)
+            k_all, v_all = new_cache.read(x.dtype)               # (B,T,KV,hd)
+            k_pos = jnp.arange(k_all.shape[1])
+            k_len = cache_pos + 1
 
     qg = q.reshape(b, s, kv, g, hd)
     if cache is not None and s == 1:
@@ -158,9 +157,12 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     return y, new_cache
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
-    kv, hd = cfg.n_kv_heads, cfg.hd
-    return {
-        "k": jnp.zeros((batch, kv, max_len, hd), dtype),
-        "v": jnp.zeros((batch, kv, max_len, hd), dtype),
-    }
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype, *,
+               kv_dtype: Optional[str] = None,
+               page_size: Optional[int] = None) -> DenseKVCache:
+    """Dense slab cache; ``kv_dtype='int8'`` stores KV quantized with
+    per-page dynamic scales (see :mod:`repro.serving.kv_cache`)."""
+    return DenseKVCache.init(
+        batch, cfg.n_kv_heads, max_len, cfg.hd, dtype,
+        quantized=(kv_dtype == "int8"),
+        page_size=page_size or DEFAULT_PAGE_SIZE)

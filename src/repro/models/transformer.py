@@ -188,14 +188,18 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
     return loss
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> list:
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                kv_dtype: Optional[str] = None) -> list:
+    """Per-layer decode caches; ``kv_dtype='int8'`` quantizes attention KV
+    (per-page dynamic scales — see :mod:`repro.serving.kv_cache`)."""
     dt = _dtype(cfg)
     caches = []
     for i in range(cfg.n_layers):
         mixer = cfg.mixer_of(i)
         c: dict = {}
         if mixer == "attn":
-            c["attn"] = attn_mod.init_cache(cfg, batch, max_len, dt)
+            c["attn"] = attn_mod.init_cache(cfg, batch, max_len, dt,
+                                            kv_dtype=kv_dtype)
         elif mixer == "mamba":
             c["mamba"] = ssm_mod.init_mamba_cache(cfg, batch, dt)
         else:

@@ -1,5 +1,29 @@
-from repro.serving.engine import (
-    build_decode_step,
-    build_prefill_step,
-    init_serve_caches,
+"""Serving stack: paged quantized KV cache + continuous-batching engine.
+
+Engine symbols are re-exported lazily (PEP 562): ``repro.models.attention``
+imports :mod:`repro.serving.kv_cache` at module scope, and an eager
+``engine`` import here would close the cycle back through
+``repro.models.transformer`` before it finishes initializing.
+"""
+from repro.serving.kv_cache import (  # noqa: F401
+    DenseKVCache,
+    PagedDecodeCache,
+    PagePool,
 )
+
+_ENGINE_EXPORTS = (
+    "ContinuousBatchingEngine",
+    "Request",
+    "build_decode_step",
+    "build_prefill_step",
+    "generate",
+    "init_serve_caches",
+    "warm_gemm_autotune",
+)
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,39 +1,49 @@
-"""Serving steps: batched prefill + single-token decode with KV cache.
+"""Serving engine: continuous batching over a paged, quantized KV cache.
 
 This is where the CAMP technique earns its keep at scale: decode is
-memory-roofline-bound, so int8/int4 weights (``cfg.qmode``) and optionally
-int8 KV cache cut the dominant roofline term 2–4×. llama4-maverick-400B
-*only* fits the single-pod decode cell quantized (see EXPERIMENTS.md).
+memory-roofline-bound, so int8/int4 weights (``cfg.qmode``) cut the weight
+stream and the paged int8 KV cache (:mod:`repro.serving.kv_cache`) cuts the
+cache stream — decode reads only the pages a sequence occupies, at one byte
+per element, dequantized in-register by the paged-attention kernel.
+
+Two serving modes:
+
+* :class:`ContinuousBatchingEngine` — sequences are admitted and finished
+  **mid-flight** over a shared page pool: ``submit()`` queues a request,
+  every ``step()`` first admits whatever fits (prefill runs densely per
+  request, then its KV is quantized page-by-page into the pool) and then
+  runs one ragged decode over all active sequences (per-sequence positions
+  and block tables; no padding to a common length). Finished sequences
+  return their pages to the free list immediately, so a long request no
+  longer holds the batch hostage. ``generate()`` is a thin batch wrapper on
+  top.
+* the dense-slab path (``build_prefill_step`` / ``build_decode_step``) —
+  the degenerate single-block-table case, kept for hybrid/recurrent mixers
+  (SSM/RWKV carry non-KV state) and for the multi-pod dry-run cells.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import autotune
 from repro.models.config import ModelConfig
 from repro.models.transformer import forward, init_caches
+from repro.serving import kv_cache as kvc
 
 
 def init_serve_caches(cfg: ModelConfig, batch: int, max_len: int,
                       kv_dtype: Optional[str] = None):
-    """KV/state caches; ``kv_dtype='int8'`` stores attention KV quantized.
-
-    int8 KV uses a fixed per-cache scale folded at write/read (symmetric,
-    scale baked into the dtype conversion here since rope output is O(1);
-    a per-block scale variant is a straightforward extension).
-    """
-    caches = init_caches(cfg, batch, max_len)
-    if kv_dtype == "int8":
-        def conv(c):
-            if isinstance(c, dict) and "k" in c and "v" in c:
-                return {"k": jnp.zeros(c["k"].shape, jnp.int8),
-                        "v": jnp.zeros(c["v"].shape, jnp.int8)}
-            return c
-        caches = [{k: conv(v) for k, v in layer.items()} for layer in caches]
-    return caches
+    """Dense KV/state caches; ``kv_dtype='int8'`` stores attention KV
+    quantized with **per-page dynamic scales** (amax/127 of each page —
+    scale handling lives in :mod:`repro.serving.kv_cache`, shared with the
+    paged pool)."""
+    return init_caches(cfg, batch, max_len, kv_dtype=kv_dtype)
 
 
 _QMODE_KIND = {"w8a8": "i8", "w4a8": "w4", "w4a4": "a4w4"}
@@ -41,24 +51,25 @@ _QMODE_KIND = {"w8a8": "i8", "w4a8": "w4", "w4a4": "a4w4"}
 
 def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
                        prefill_len: int = 0, measure=None):
-    """Pre-tune CAMP GEMM blocks for the dense transformer linears.
+    """Pre-tune CAMP GEMM blocks for the transformer's serving linears.
 
     Decode runs one token per sequence (M = batch) and prefill runs
     M = batch × prompt_len; both hit the same (K, N) weight shapes. Tuning
     them here — measured on a live TPU, analytic elsewhere — populates the
     persistent autotune cache so the request path never tunes. Covered:
-    attention q/kv/out, dense MLP up/gate/down, and the untied lm head.
-    Mixer-specific extras (SSM/RWKV projections) and MoE experts are not
-    enumerated — the former cold-tune on first sight (instant off-TPU), the
-    latter run through einsum, not the CAMP GEMM cache.
+    attention q/kv/out, dense MLP up/gate/down, MoE expert up/gate/down
+    (``(d, expert_ff)`` / ``(expert_ff, d)``), and the untied lm head.
+    Note: today's expert compute is a batched einsum that bypasses the CAMP
+    GEMM dispatch — the expert entries pre-populate the cache for the
+    planned per-expert CAMP routing (see ROADMAP follow-ups), they are not
+    read by the current einsum path. Mixer-specific extras (SSM/RWKV
+    projections) still cold-tune on first sight.
 
     Returns [((m, n, k), (bm, bn, bk)), ...] for logging.
     """
     kind = _QMODE_KIND.get(cfg.qmode)
     if kind is None:  # 'none' / weight-only: bf16 matmul, nothing to tune
         return []
-    import jax.numpy as jnp
-    from repro.core import autotune
     a_in_bytes = jnp.dtype(cfg.dtype).itemsize  # must match the request path
     d, hd = cfg.d_model, cfg.hd
     proj = {
@@ -66,6 +77,8 @@ def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
         (hd * cfg.n_heads, d),                             # attn out
         (d, cfg.d_ff), (cfg.d_ff, d),                      # mlp up/gate/down
     }
+    if cfg.moe_experts:
+        proj |= {(d, cfg.expert_ff), (cfg.expert_ff, d)}   # expert up/gate/down
     if not cfg.tie_embeddings:
         proj.add((d, cfg.vocab_size))                      # quantized lm head
     ms = sorted({b * max(prefill_len, 1) for b in batch_sizes} |
@@ -114,13 +127,187 @@ def build_decode_step(cfg: ModelConfig, *, sample: str = "greedy",
     return decode_step
 
 
-def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
-             key=None, sample: str = "greedy", temperature: float = 1.0,
-             max_len: Optional[int] = None):
-    """Simple batched generation loop (prefill + python decode loop)."""
+# ---------------------------------------------------------------------------
+# Continuous batching over the shared page pool
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    """One in-flight generation request."""
+    seq_id: int
+    prompt: jax.Array                    # (S,) int32
+    max_new_tokens: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def reserve_tokens(self) -> int:
+        return int(self.prompt.shape[0]) + self.max_new_tokens
+
+
+class ContinuousBatchingEngine:
+    """Admit/finish sequences mid-flight over a shared paged KV pool.
+
+    Scheduling is conservative: a request is admitted only when the pool can
+    reserve its worst-case page count (prompt + max_new_tokens), so an
+    admitted sequence can never stall mid-decode waiting for pages. Each
+    ``step()``:
+
+    1. admits queued requests in FIFO order while reservations fit — each
+       admission runs a batch-1 dense prefill (exact, model dtype) and
+       quantizes the resulting KV page-by-page into the pool;
+    2. runs **one ragged decode** over every active sequence: per-sequence
+       positions, per-sequence block tables, one forward pass — attention
+       goes through the paged int8 kernel, so a step's HBM traffic is the
+       pages actually occupied, not ``batch × max_len``;
+    3. retires sequences that hit their token budget and returns their pages
+       to the free list, making room for the next admission.
+
+    Per-sequence results are independent of co-scheduling: pages are owned
+    exclusively, per-page scales depend only on a page's own content,
+    attention is masked per sequence length, and sampling keys are derived
+    per (seq_id, token index) — a sequence decodes identically whether it
+    runs alone or inside a changing batch.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 kv_dtype: Optional[str] = "int8",
+                 page_size: Optional[int] = None,
+                 capacity_tokens: Optional[int] = None,
+                 sample: str = "greedy", temperature: float = 1.0,
+                 key: Optional[jax.Array] = None):
+        mixers = {cfg.mixer_of(i) for i in range(cfg.n_layers)}
+        if mixers != {"attn"}:
+            raise ValueError(
+                f"continuous batching requires attention mixers, got {mixers}"
+                " (hybrid/recurrent models use the dense serving path)")
+        self.params, self.cfg = params, cfg
+        self.sample, self.temperature = sample, temperature
+        self.key = jax.random.PRNGKey(0) if key is None else key
+        # page size comes from the persistent autotune cache (analytic v5e
+        # model off-TPU) unless pinned by the caller
+        ps = page_size or autotune.get_page_size(
+            cfg.n_kv_heads, cfg.hd, mean_len=max(cfg.max_seq_len // 2, 128))
+        capacity_tokens = capacity_tokens or 8 * cfg.max_seq_len
+        self.pool = kvc.PagePool(
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            num_pages=-(-capacity_tokens // ps), page_size=ps,
+            quantized=(kv_dtype == "int8"), dtype=jnp.dtype(cfg.dtype))
+        self.waiting: collections.deque = collections.deque()
+        self.active: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._next_id = 0
+
+    # -- request lifecycle ----------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        """Queue a prompt; returns its sequence id."""
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(-1)
+        seq_id = self._next_id
+        self._next_id += 1
+        self.waiting.append(Request(seq_id, prompt, max_new_tokens))
+        return seq_id
+
+    def _sample_tokens(self, logits: jax.Array,
+                       reqs: List[Request]) -> jax.Array:
+        """logits (B, V) → (B,) int32; rows align with ``reqs``.
+
+        Non-greedy keys are folded from (engine key, seq_id, token index),
+        never from a shared stream — so sampled tokens don't depend on which
+        other sequences happen to share the batch.
+        """
+        last = logits.astype(jnp.float32)
+        if self.sample == "greedy":
+            return jnp.argmax(last, axis=-1)
+        keys = jnp.stack([
+            jax.random.fold_in(jax.random.fold_in(self.key, r.seq_id),
+                               len(r.tokens))
+            for r in reqs])
+        return jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / self.temperature)
+        )(keys, last)
+
+    def _finish(self, req: Request) -> None:
+        self.pool.release(req.seq_id)
+        req.done = True
+        self.finished[req.seq_id] = req
+
+    def _prefill(self, req: Request) -> None:
+        """Batch-1 dense prefill, then quantize KV into the pool's pages."""
+        s = int(req.prompt.shape[0])
+        self.pool.reserve(req.seq_id, req.reserve_tokens)
+        caches = init_caches(self.cfg, 1, s)
+        logits, caches, _ = forward(self.params, self.cfg, req.prompt[None],
+                                    caches=caches, last_logits_only=True)
+        for i, layer in enumerate(caches):
+            dense = layer["attn"]
+            self.pool.ingest(req.seq_id, i, dense.k, dense.v)
+        req.tokens.append(int(self._sample_tokens(logits[:, -1], [req])[0]))
+        if len(req.tokens) >= req.max_new_tokens:
+            self._finish(req)
+        else:
+            self.active.append(req)
+
+    def _admit(self) -> None:
+        while self.waiting:
+            nxt: Request = self.waiting[0]
+            if not self.pool.can_reserve(nxt.reserve_tokens):
+                if not self.active:
+                    raise RuntimeError(
+                        f"request {nxt.seq_id} needs "
+                        f"{self.pool.pages_for(nxt.reserve_tokens)} pages; "
+                        f"pool has {self.pool.num_pages} total")
+                break
+            self.waiting.popleft()
+            self._prefill(nxt)
+
+    def _decode(self) -> None:
+        """One ragged decode step over all active sequences."""
+        reqs = list(self.active)
+        seq_ids = [r.seq_id for r in reqs]
+        tokens = jnp.asarray([[r.tokens[-1]] for r in reqs], jnp.int32)
+        tables, lengths = self.pool.batch_tables(seq_ids)
+        caches = [{"attn": self.pool.layer_cache(i, tables, lengths)}
+                  for i in range(self.cfg.n_layers)]
+        logits, new_caches, _ = forward(self.params, self.cfg, tokens,
+                                        positions=lengths[:, None],
+                                        caches=caches)
+        for i, layer in enumerate(new_caches):
+            self.pool.writeback(i, layer["attn"])
+        for r in reqs:
+            self.pool.lens[r.seq_id] += 1
+        nxt = np.asarray(self._sample_tokens(logits[:, -1], reqs))
+        self.active = []
+        for r, t in zip(reqs, nxt):
+            r.tokens.append(int(t))
+            if len(r.tokens) >= r.max_new_tokens:
+                self._finish(r)
+            else:
+                self.active.append(r)
+
+    # -- driving ---------------------------------------------------------
+    def step(self) -> bool:
+        """Admit what fits, then one decode step. True while work remains."""
+        self._admit()
+        if self.active:
+            self._decode()
+        return bool(self.active or self.waiting)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain all queued/active requests; {seq_id: generated tokens}."""
+        while self.step():
+            pass
+        return {sid: list(r.tokens) for sid, r in self.finished.items()}
+
+
+# ---------------------------------------------------------------------------
+# Batched generation entrypoints
+# ---------------------------------------------------------------------------
+def _generate_dense(params, cfg: ModelConfig, prompt: jax.Array, *,
+                    steps: int, key, sample: str, temperature: float,
+                    max_len: Optional[int], kv_dtype: Optional[str]):
+    """Legacy dense-slab loop (hybrid/recurrent mixers carry non-KV state)."""
     b, s = prompt.shape[:2]
     max_len = max_len or (s + steps)
-    caches = init_serve_caches(cfg, b, max_len)
+    caches = init_serve_caches(cfg, b, max_len, kv_dtype=kv_dtype)
     prefill = build_prefill_step(cfg)
     decode = build_decode_step(cfg, sample=sample, temperature=temperature)
     last, caches = prefill(params, prompt, caches)
@@ -131,3 +318,29 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
         tok, caches = decode(params, caches, tok, jnp.int32(s + i), k)
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
+             key=None, sample: str = "greedy", temperature: float = 1.0,
+             max_len: Optional[int] = None, kv_dtype: Optional[str] = None,
+             page_size: Optional[int] = None):
+    """Batched generation: prompt (B, S) → (B, steps) new tokens.
+
+    All-attention models run on the continuous-batching engine (paged pool;
+    pages are int8 when ``kv_dtype='int8'``, else the model dtype). Models
+    with SSM/RWKV mixers fall back to the dense-slab loop.
+    """
+    b, s = prompt.shape[:2]
+    if (cfg.embedding_inputs
+            or any(cfg.mixer_of(i) != "attn" for i in range(cfg.n_layers))):
+        return _generate_dense(params, cfg, prompt, steps=steps, key=key,
+                               sample=sample, temperature=temperature,
+                               max_len=max_len, kv_dtype=kv_dtype)
+    ps = page_size or kvc.DEFAULT_PAGE_SIZE
+    eng = ContinuousBatchingEngine(
+        params, cfg, kv_dtype=kv_dtype, page_size=ps,
+        capacity_tokens=b * kvc.round_up(s + steps, ps),
+        sample=sample, temperature=temperature, key=key)
+    sids = [eng.submit(prompt[i], steps) for i in range(b)]
+    outs = eng.run()
+    return jnp.asarray([outs[sid] for sid in sids], jnp.int32)

@@ -1,0 +1,429 @@
+"""Paged, quantized KV cache — the CAMP storage/compute split applied to
+the serving cache itself.
+
+Decode is memory-roofline-bound: every generated token re-reads the whole
+KV cache. Two orthogonal reductions live here:
+
+* **int8 storage with per-page dynamic scales** — each (page, kv-head) slice
+  carries its own scale (amax/127 of the page content), replacing the old
+  global hard-coded ``KV_INT8_SCALE``. Keys after rope/qk-norm are O(1) but
+  not uniformly so across layers and heads; dynamic per-page scales keep the
+  quantization step proportional to the *local* magnitude.
+* **paging** — KV lives in fixed-size pages owned by a shared pool;
+  per-sequence block tables map logical positions to page slots. Decode
+  reads only the pages a sequence actually occupies instead of a
+  ``(batch, max_len)`` slab, and a continuous-batching engine can admit /
+  finish sequences mid-flight by moving pages between the free list and
+  block tables (the vLLM PagedAttention memory model).
+
+Three cache types:
+
+* :class:`DenseKVCache` — the (B, KV, T, hd) slab, used by prefill and as
+  the degenerate single-block-table case (training / legacy decode paths are
+  untouched). Quantized variants view the slab as ``T // page_size`` pages so
+  the scale handling is identical to the pool's.
+* :class:`PagePool` — host-side page allocator: per-layer page arrays, a
+  free list, per-sequence block tables and lengths.
+* :class:`PagedDecodeCache` — a per-layer, per-decode-step pytree view
+  (pages + scales + batched block table + lengths) that flows through
+  ``forward``; :mod:`repro.models.attention` appends to it and runs the
+  paged-attention kernel over it.
+
+All int8 conversion in the repo funnels through :func:`quantize_int8` /
+:func:`dequantize_int8` here (previously duplicated between
+``models.attention._to_cache_dtype`` and ``serving.engine.init_serve_caches``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_AMAX = 127.0
+SCALE_EPS = 1e-8          # floor so all-zero pages dequantize to exact zeros
+DEFAULT_PAGE_SIZE = 16
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# int8 conversion — the one place scale handling lives
+# ---------------------------------------------------------------------------
+def int8_scale(x: jax.Array, axes) -> jax.Array:
+    """Symmetric dynamic scale: amax over ``axes`` / 127, floored."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes)
+    return jnp.maximum(amax / INT8_AMAX, SCALE_EPS)
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Round-to-nearest symmetric int8; ``scale`` broadcasts against ``x``."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -INT8_AMAX, INT8_AMAX).astype(jnp.int8)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _quantize_pages(x: jax.Array, page_size: int) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., T, hd) with T a page multiple → (int8 (..., T, hd),
+    scales (..., T // page_size)) — one scale per (lead..., page)."""
+    lead = x.shape[:-2]
+    t, hd = x.shape[-2:]
+    n_pages = t // page_size
+    paged = x.reshape(*lead, n_pages, page_size, hd)
+    scale = int8_scale(paged, axes=(-2, -1))                 # (..., n_pages)
+    q = quantize_int8(paged, scale[..., None, None])
+    return q.reshape(*lead, t, hd), scale
+
+
+# ---------------------------------------------------------------------------
+# Dense slab cache (prefill + legacy decode; training path unchanged)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DenseKVCache:
+    """(B, KV, T, hd) KV slab; int8 storage carries per-page scales.
+
+    ``k_scale``/``v_scale``: (B, KV, T // page_size) f32, or None for float
+    storage. Registered as a pytree (page_size is static aux data) so caches
+    flow through ``jax.eval_shape`` / shardings / jit unchanged.
+    """
+    k: jax.Array
+    v: jax.Array
+    k_scale: Optional[jax.Array]
+    v_scale: Optional[jax.Array]
+    page_size: int
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def init(cls, batch: int, n_kv_heads: int, max_len: int, head_dim: int,
+             dtype, *, quantized: bool = False,
+             page_size: int = DEFAULT_PAGE_SIZE) -> "DenseKVCache":
+        if quantized:
+            t = round_up(max_len, page_size)
+            shape = (batch, n_kv_heads, t, head_dim)
+            sshape = (batch, n_kv_heads, t // page_size)
+            return cls(k=jnp.zeros(shape, jnp.int8),
+                       v=jnp.zeros(shape, jnp.int8),
+                       k_scale=jnp.full(sshape, SCALE_EPS, jnp.float32),
+                       v_scale=jnp.full(sshape, SCALE_EPS, jnp.float32),
+                       page_size=page_size)
+        shape = (batch, n_kv_heads, max_len, head_dim)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   k_scale=None, v_scale=None, page_size=page_size)
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+    # -- writes ----------------------------------------------------------
+    def write_prefill(self, k_t: jax.Array, v_t: jax.Array) -> "DenseKVCache":
+        """Fill positions [0, S) from (B, KV, S, hd) new keys/values."""
+        if not self.quantized:
+            k = jax.lax.dynamic_update_slice(
+                self.k, k_t.astype(self.k.dtype), (0, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                self.v, v_t.astype(self.v.dtype), (0, 0, 0, 0))
+            return dataclasses.replace(self, k=k, v=v)
+        ps = self.page_size
+        s = k_t.shape[2]
+        pad = round_up(s, ps) - s
+        if pad:
+            width = ((0, 0), (0, 0), (0, pad), (0, 0))
+            k_t = jnp.pad(k_t.astype(jnp.float32), width)
+            v_t = jnp.pad(v_t.astype(jnp.float32), width)
+        kq, ks = _quantize_pages(k_t, ps)
+        vq, vs = _quantize_pages(v_t, ps)
+        return dataclasses.replace(
+            self,
+            k=jax.lax.dynamic_update_slice(self.k, kq, (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(self.v, vq, (0, 0, 0, 0)),
+            k_scale=jax.lax.dynamic_update_slice(self.k_scale, ks, (0, 0, 0)),
+            v_scale=jax.lax.dynamic_update_slice(self.v_scale, vs, (0, 0, 0)))
+
+    def append(self, k_t: jax.Array, v_t: jax.Array, pos) -> "DenseKVCache":
+        """Write one token (B, KV, 1, hd) at (traced) position ``pos``."""
+        if not self.quantized:
+            k = jax.lax.dynamic_update_slice(
+                self.k, k_t.astype(self.k.dtype), (0, 0, pos, 0))
+            v = jax.lax.dynamic_update_slice(
+                self.v, v_t.astype(self.v.dtype), (0, 0, pos, 0))
+            return dataclasses.replace(self, k=k, v=v)
+        ps = self.page_size
+        b, kv, _, hd = self.k.shape
+        page = pos // ps
+        start = page * ps
+        off = pos - start
+
+        def upd(slab, scales, new):
+            pageq = jax.lax.dynamic_slice(slab, (0, 0, start, 0),
+                                          (b, kv, ps, hd))
+            sc = jax.lax.dynamic_slice(scales, (0, 0, page), (b, kv, 1))
+            pf = pageq.astype(jnp.float32) * sc[..., None]       # (B,KV,ps,hd)
+            idx = jnp.arange(ps)
+            keep = (idx < off)[None, None, :, None]
+            ins = (idx == off)[None, None, :, None]
+            pf = jnp.where(keep, pf, 0.0) + new.astype(jnp.float32) * ins
+            sc_new = int8_scale(pf, axes=(2, 3))[..., None]      # (B,KV,1)
+            pq = quantize_int8(pf, sc_new[..., None])
+            return (jax.lax.dynamic_update_slice(slab, pq, (0, 0, start, 0)),
+                    jax.lax.dynamic_update_slice(scales, sc_new, (0, 0, page)))
+
+        k, k_scale = upd(self.k, self.k_scale, k_t)
+        v, v_scale = upd(self.v, self.v_scale, v_t)
+        return dataclasses.replace(self, k=k, v=v, k_scale=k_scale,
+                                   v_scale=v_scale)
+
+    # -- reads -----------------------------------------------------------
+    def read(self, out_dtype) -> Tuple[jax.Array, jax.Array]:
+        """Dequantized contents: ((B, T, KV, hd), (B, T, KV, hd))."""
+        if not self.quantized:
+            return (jnp.swapaxes(self.k, 1, 2).astype(out_dtype),
+                    jnp.swapaxes(self.v, 1, 2).astype(out_dtype))
+        b, kv, t, hd = self.k.shape
+        ps = self.page_size
+
+        def deq(slab, scales):
+            paged = slab.reshape(b, kv, t // ps, ps, hd)
+            f = dequantize_int8(paged, scales[..., None, None], out_dtype)
+            return jnp.swapaxes(f.reshape(b, kv, t, hd), 1, 2)
+
+        return deq(self.k, self.k_scale), deq(self.v, self.v_scale)
+
+
+def _dense_flatten(c: DenseKVCache):
+    return (c.k, c.v, c.k_scale, c.v_scale), (c.page_size,)
+
+
+def _dense_unflatten(aux, children):
+    k, v, ks, vs = children
+    return DenseKVCache(k=k, v=v, k_scale=ks, v_scale=vs, page_size=aux[0])
+
+
+jax.tree_util.register_pytree_node(DenseKVCache, _dense_flatten,
+                                   _dense_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode view (flows through forward() during a ragged decode step)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PagedDecodeCache:
+    """One attention layer's paged KV for one batched decode step.
+
+    ``k_pages``/``v_pages``: (P, KV, page_size, hd) pool pages (int8 when
+    quantized, else the model dtype). ``k_scale``/``v_scale``: (P, KV) f32
+    per-page scales (None for float pages). ``tables``: (B, max_pages) int32
+    block table (rows padded with slot 0 past a sequence's last page).
+    ``lengths``: (B,) int32 tokens currently cached per sequence.
+    """
+    k_pages: jax.Array
+    v_pages: jax.Array
+    k_scale: Optional[jax.Array]
+    v_scale: Optional[jax.Array]
+    tables: jax.Array
+    lengths: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    def append(self, k_new: jax.Array, v_new: jax.Array) -> "PagedDecodeCache":
+        """Append one token per sequence: k_new/v_new (B, KV, hd).
+
+        Each sequence's target page is requantized in place: gather →
+        dequantize with the old per-page scale → insert the token (masking
+        stale tail positions from previously-evicted occupants) → recompute
+        the page scale → scatter back. Sequences own disjoint pages, so the
+        batched scatter never collides.
+        """
+        ps = self.page_size
+        pidx = self.lengths // ps                                  # (B,)
+        slot = jnp.take_along_axis(self.tables, pidx[:, None], axis=1)[:, 0]
+        off = self.lengths % ps                                    # (B,)
+        idx = jnp.arange(ps)
+        keep = (idx[None, :] < off[:, None])[:, None, :, None]     # (B,1,ps,1)
+        ins = (idx[None, :] == off[:, None])[:, None, :, None]
+
+        def upd(pages, scales, new):
+            gathered = pages[slot]                                 # (B,KV,ps,hd)
+            if scales is None:
+                pf = jnp.where(keep, gathered, 0)
+                pf = pf + new[:, :, None, :].astype(pages.dtype) * ins.astype(
+                    pages.dtype)
+                return pages.at[slot].set(pf), None
+            sc = scales[slot]                                      # (B,KV)
+            pf = gathered.astype(jnp.float32) * sc[..., None, None]
+            pf = jnp.where(keep, pf, 0.0) + \
+                new[:, :, None, :].astype(jnp.float32) * ins
+            sc_new = int8_scale(pf, axes=(2, 3))                   # (B,KV)
+            pq = quantize_int8(pf, sc_new[..., None, None])
+            return pages.at[slot].set(pq), scales.at[slot].set(sc_new)
+
+        k_pages, k_scale = upd(self.k_pages, self.k_scale, k_new)
+        v_pages, v_scale = upd(self.v_pages, self.v_scale, v_new)
+        return dataclasses.replace(self, k_pages=k_pages, v_pages=v_pages,
+                                   k_scale=k_scale, v_scale=v_scale,
+                                   lengths=self.lengths + 1)
+
+
+def _paged_flatten(c: PagedDecodeCache):
+    return (c.k_pages, c.v_pages, c.k_scale, c.v_scale, c.tables,
+            c.lengths), ()
+
+
+def _paged_unflatten(aux, children):
+    kp, vp, ks, vs, tables, lengths = children
+    return PagedDecodeCache(k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+                            tables=tables, lengths=lengths)
+
+
+jax.tree_util.register_pytree_node(PagedDecodeCache, _paged_flatten,
+                                   _paged_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Page pool (host-side allocator shared by all layers of a model)
+# ---------------------------------------------------------------------------
+class PagePool:
+    """Fixed pool of KV pages + free-list allocation + per-seq block tables.
+
+    One logical page slot spans every layer (each layer keeps its own
+    (P, KV, ps, hd) arrays; a sequence's block table indexes all of them),
+    so allocation is a single free-list pop per ``page_size`` tokens.
+    Admission control is conservative: :meth:`reserve` claims the worst-case
+    page count for a sequence up front, so a running sequence can never
+    deadlock the pool mid-decode.
+    """
+
+    def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
+                 num_pages: int, page_size: int = DEFAULT_PAGE_SIZE,
+                 quantized: bool = True, dtype=jnp.bfloat16):
+        self.n_layers = n_layers
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.quantized = quantized
+        self.dtype = dtype
+        shape = (num_pages, n_kv_heads, page_size, head_dim)
+        page_dtype = jnp.int8 if quantized else dtype
+        self.k_pages: List[jax.Array] = [jnp.zeros(shape, page_dtype)
+                                         for _ in range(n_layers)]
+        self.v_pages: List[jax.Array] = [jnp.zeros(shape, page_dtype)
+                                         for _ in range(n_layers)]
+        if quantized:
+            sshape = (num_pages, n_kv_heads)
+            self.k_scale: List[Optional[jax.Array]] = [
+                jnp.full(sshape, SCALE_EPS, jnp.float32)
+                for _ in range(n_layers)]
+            self.v_scale: List[Optional[jax.Array]] = [
+                jnp.full(sshape, SCALE_EPS, jnp.float32)
+                for _ in range(n_layers)]
+        else:
+            self.k_scale = [None] * n_layers
+            self.v_scale = [None] * n_layers
+        self.free: List[int] = list(range(num_pages))
+        self.tables: Dict[int, List[int]] = {}
+        self.lens: Dict[int, int] = {}
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def can_reserve(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= self.num_free
+
+    def page_bytes(self) -> int:
+        """HBM bytes one page slot occupies across all layers (k + v)."""
+        per = self.n_kv_heads * self.page_size * self.head_dim
+        itemsize = 1 if self.quantized else jnp.dtype(self.dtype).itemsize
+        scale = 2 * 4 * self.n_kv_heads if self.quantized else 0
+        return self.n_layers * (2 * per * itemsize + scale)
+
+    # -- alloc / free ----------------------------------------------------
+    def reserve(self, seq_id: int, n_tokens: int) -> None:
+        """Claim pages covering ``n_tokens`` worst-case for a new sequence."""
+        if seq_id in self.tables:
+            raise ValueError(f"seq {seq_id} already resident")
+        need = self.pages_for(n_tokens)
+        if need > self.num_free:
+            raise RuntimeError(
+                f"page pool exhausted: need {need}, free {self.num_free}")
+        self.tables[seq_id] = [self.free.pop() for _ in range(need)]
+        self.lens[seq_id] = 0
+
+    def release(self, seq_id: int) -> None:
+        """Return a finished/evicted sequence's pages to the free list."""
+        self.free.extend(self.tables.pop(seq_id))
+        self.lens.pop(seq_id)
+
+    # -- data movement ---------------------------------------------------
+    def ingest(self, seq_id: int, layer: int, k_t: jax.Array,
+               v_t: jax.Array) -> None:
+        """Quantize one layer's prefill KV (1, KV, S, hd) into pages."""
+        ps = self.page_size
+        kv, hd = self.n_kv_heads, self.head_dim
+        s = k_t.shape[2]
+        n_pages = self.pages_for(s)
+        if n_pages > len(self.tables[seq_id]):
+            raise RuntimeError(f"seq {seq_id}: prefill exceeds reservation")
+        pad = n_pages * ps - s
+        width = ((0, 0), (0, 0), (0, pad), (0, 0))
+
+        def to_pages(x):
+            x = jnp.pad(x.astype(jnp.float32), width)[0]       # (KV, Sp, hd)
+            x = x.reshape(kv, n_pages, ps, hd)
+            return jnp.swapaxes(x, 0, 1)                       # (np, KV, ps, hd)
+
+        slots = jnp.asarray(self.tables[seq_id][:n_pages], jnp.int32)
+        for pages, scales, x in ((self.k_pages, self.k_scale, k_t),
+                                 (self.v_pages, self.v_scale, v_t)):
+            xp = to_pages(x)
+            if self.quantized:
+                sc = int8_scale(xp, axes=(2, 3))               # (np, KV)
+                xq = quantize_int8(xp, sc[..., None, None])
+                scales[layer] = scales[layer].at[slots].set(sc)
+            else:
+                xq = xp.astype(pages[layer].dtype)
+            pages[layer] = pages[layer].at[slots].set(xq)
+        self.lens[seq_id] = s
+
+    def batch_tables(self, seq_ids) -> Tuple[jax.Array, jax.Array]:
+        """Padded (B, max_pages) block table + (B,) lengths for a decode."""
+        max_pages = max(len(self.tables[s]) for s in seq_ids)
+        rows = [self.tables[s] + [0] * (max_pages - len(self.tables[s]))
+                for s in seq_ids]
+        return (jnp.asarray(rows, jnp.int32),
+                jnp.asarray([self.lens[s] for s in seq_ids], jnp.int32))
+
+    def layer_cache(self, layer: int, tables: jax.Array,
+                    lengths: jax.Array) -> PagedDecodeCache:
+        return PagedDecodeCache(
+            k_pages=self.k_pages[layer], v_pages=self.v_pages[layer],
+            k_scale=self.k_scale[layer], v_scale=self.v_scale[layer],
+            tables=tables, lengths=lengths)
+
+    def writeback(self, layer: int, cache: PagedDecodeCache) -> None:
+        """Store a decode step's functional updates back into the pool."""
+        self.k_pages[layer] = cache.k_pages
+        self.v_pages[layer] = cache.v_pages
+        self.k_scale[layer] = cache.k_scale
+        self.v_scale[layer] = cache.v_scale

@@ -81,6 +81,36 @@ def test_tune_with_custom_timer_picks_argmin(tmp_path, monkeypatch):
     autotune.clear_cache()
 
 
+def test_get_page_size_caches_and_respects_timer(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    autotune.clear_cache()
+    ps = autotune.get_page_size(8, 128, 2048)
+    assert ps in autotune.PAGE_SIZES
+    data = json.load(open(tmp_path / "c.json"))
+    assert any(k.startswith("pattn|") for k in data)
+    # cached: a contradictory timer must NOT override the stored pick
+    assert autotune.get_page_size(8, 128, 2048,
+                                  timer=lambda p: -p) == ps
+    # fresh shape with a timer favoring the largest page
+    assert autotune.get_page_size(8, 128, 4096, timer=lambda p: -p) == \
+        max(autotune.PAGE_SIZES)
+    autotune.clear_cache()
+
+
+def test_warm_gemm_autotune_covers_moe_expert_shapes(tmp_path, monkeypatch):
+    from repro.configs import get_config
+    from repro.serving.engine import warm_gemm_autotune
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    autotune.clear_cache()
+    cfg = get_config("moonshot-v1-16b-a3b", reduced=True, qmode="w8a8")
+    assert cfg.moe_experts
+    tuned = warm_gemm_autotune(cfg, batch_sizes=(1,))
+    kns = {(k, n) for ((m, n, k), _) in tuned}
+    assert (cfg.d_model, cfg.expert_ff) in kns    # expert up/gate
+    assert (cfg.expert_ff, cfg.d_model) in kns    # expert down
+    autotune.clear_cache()
+
+
 def test_gemm_autotuned_default_blocks_run(tmp_path, monkeypatch):
     """ops.gemm_* with block=None (the default) must pick blocks that run —
     including shapes that are not multiples of anything in particular."""

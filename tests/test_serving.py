@@ -1,5 +1,6 @@
 """Serving engine: generation determinism, quantized-vs-bf16 agreement,
-int8 KV cache accuracy, batched requests."""
+int8 KV cache accuracy, batched requests, paged-int8 decode parity and
+continuous batching."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +8,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import forward, init_params, quantize_params
-from repro.serving.engine import (build_decode_step, build_prefill_step,
-                                  generate, init_serve_caches)
+from repro.serving.engine import (ContinuousBatchingEngine, build_decode_step,
+                                  build_prefill_step, generate,
+                                  init_serve_caches)
+from repro.serving.kv_cache import PagePool
 
 
 @pytest.fixture(scope="module")
@@ -80,6 +83,87 @@ def test_batched_requests_isolated(model):
     solo = np.asarray(generate(params, cfg, p1, steps=6))
     batched = np.asarray(generate(params, cfg, both, steps=6))
     np.testing.assert_array_equal(batched[0], solo[0])
+
+
+@pytest.mark.parametrize("n_kv", [1, 2, 4])   # MQA / GQA / MHA
+def test_paged_int8_decode_parity_vs_f32_dense(n_kv):
+    """Paged int8-KV decode logits track the dense f32-cache reference."""
+    cfg = get_config("qwen2-0.5b", reduced=True, dtype="float32",
+                     n_heads=4, n_kv_heads=n_kv, head_dim=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, s, steps, ps = 2, 12, 4, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    caches = init_serve_caches(cfg, b, s + steps)            # dense f32
+    last, caches = build_prefill_step(cfg)(params, toks, caches)
+
+    pool = PagePool(n_layers=cfg.n_layers, n_kv_heads=n_kv, head_dim=cfg.hd,
+                    num_pages=4 * b * ((s + steps) // ps + 1), page_size=ps,
+                    quantized=True, dtype=jnp.float32)
+    for row in range(b):
+        pool.reserve(row, s + steps)
+        for i, layer in enumerate(caches):
+            pool.ingest(row, i, layer["attn"].k[row:row + 1, :, :s],
+                        layer["attn"].v[row:row + 1, :, :s])
+
+    tok = jnp.argmax(last.astype(jnp.float32), -1)[:, None].astype(jnp.int32)
+    for step in range(steps):
+        logits_d, caches, _ = forward(params, cfg, tok, caches=caches,
+                                      cache_pos=jnp.int32(s + step))
+        tables, lengths = pool.batch_tables(list(range(b)))
+        pcaches = [{"attn": pool.layer_cache(i, tables, lengths)}
+                   for i in range(cfg.n_layers)]
+        logits_p, new_p, _ = forward(params, cfg, tok,
+                                     positions=lengths[:, None],
+                                     caches=pcaches)
+        for i, layer in enumerate(new_p):
+            pool.writeback(i, layer["attn"])
+        for row in range(b):
+            pool.lens[row] += 1
+        np.testing.assert_allclose(
+            np.asarray(logits_p, np.float32), np.asarray(logits_d, np.float32),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"n_kv={n_kv} decode step {step}")
+        # drive both paths with the same next token
+        tok = jnp.argmax(logits_d[:, -1].astype(jnp.float32),
+                         -1)[:, None].astype(jnp.int32)
+
+
+def test_continuous_batching_mixed_trace_matches_solo(model):
+    """Sequences entering/leaving mid-flight decode exactly as when alone."""
+    cfg, params = model
+    specs = [(5, 6), (12, 4), (8, 10), (3, 3), (16, 5)]     # (prompt, max_new)
+    prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (n,), 0,
+                                  cfg.vocab_size)
+               for i, (n, _) in enumerate(specs)]
+
+    def make_engine():
+        # 8 pages of 8 tokens < the 11 pages the trace needs in total →
+        # admission is staggered and relies on mid-flight page reclamation
+        return ContinuousBatchingEngine(params, cfg, kv_dtype="int8",
+                                        page_size=8, capacity_tokens=64)
+
+    eng = make_engine()
+    sids = [eng.submit(prompts[i], mx) for i, (_, mx) in enumerate(specs)]
+    mixed = eng.run()
+    assert set(mixed) == set(sids)
+    for i, (n, mx) in enumerate(specs):
+        assert len(mixed[sids[i]]) == mx
+        solo_eng = make_engine()
+        sid = solo_eng.submit(prompts[i], mx)
+        solo = solo_eng.run()[sid]
+        assert mixed[sids[i]] == solo, f"request {i} diverged under batching"
+    assert eng.pool.num_free == eng.pool.num_pages   # all pages reclaimed
+
+
+def test_engine_rejects_oversized_request():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(params, cfg, kv_dtype="int8",
+                                   page_size=8, capacity_tokens=16)
+    eng.submit(jnp.zeros((8,), jnp.int32), 32)       # needs 5 pages, pool has 2
+    with pytest.raises(RuntimeError):
+        eng.run()
 
 
 def test_temperature_sampling_runs(model):
