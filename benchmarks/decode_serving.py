@@ -1,6 +1,7 @@
-"""Decode serving: dense-bf16 vs dense-int8 vs paged-int8 KV caches.
+"""Decode serving: dense-bf16 vs dense-int8 vs paged-int8 KV caches, plus
+prefix sharing and chunked paged prefill.
 
-Two numbers per (cache kind, batch), following benchmarks/common.py:
+Per (cache kind, batch), following benchmarks/common.py:
 
 * measured — wall-clock tokens/s of the real serving path on THIS host
   (XLA-CPU): the dense slab loop for the dense kinds, the
@@ -13,25 +14,41 @@ Two numbers per (cache kind, batch), following benchmarks/common.py:
   actually occupy (block-table gather) plus the one-page requantize
   write-back per appended token.
 
+Two serving-regime sections ride along:
+
+* prefix sharing — N requests with a common P-token prefix admitted
+  through the engine's trie: shared physical pages vs the N·P/page_size an
+  unshared pool would burn.
+* chunked paged prefill — engine prefill throughput (tokens straight into
+  int8 pages, no dense staging slab) and the pages touched.
+
 Emits ``BENCH_decode.json`` at the repo root so the serving-roofline
 trajectory is recorded run over run. The headline acceptance ratio is
-``paged-int8 / dense-bf16`` modeled bytes at batch 8.
+``paged-int8 / dense-bf16`` modeled bytes at batch 8. Set
+``REPRO_BENCH_TINY=1`` for a seconds-scale smoke run (CI) that skips the
+JSON write.
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import csv_row
 
-BATCHES = (1, 8, 32)
-PROMPT = 32
-STEPS = 8
-MAX_LEN = 256           # dense slab allocation (what the slab path streams)
-PAGE_SIZE = 16
+_TINY = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+
+BATCHES = (1, 2) if _TINY else (1, 8, 32)
+PROMPT = 8 if _TINY else 32
+STEPS = 2 if _TINY else 8
+MAX_LEN = 64 if _TINY else 256  # dense slab allocation (what the slab streams)
+PAGE_SIZE = 8 if _TINY else 16
+PREFIX_SEQS = 2 if _TINY else 8
+PREFIX_LEN = 16 if _TINY else 64
+PREFILL_PROMPT = 32 if _TINY else 128
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_decode.json")
@@ -39,6 +56,10 @@ _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
 
 def _cfg():
     from repro.configs import get_config
+    if _TINY:
+        return get_config("qwen2-0.5b", n_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=512, max_seq_len=MAX_LEN)
     return get_config("qwen2-0.5b", n_layers=4, d_model=256, n_heads=4,
                       n_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=8192,
                       max_seq_len=MAX_LEN)
@@ -68,12 +89,9 @@ def modeled_bytes_step(cfg, batch: int, kind: str, *, mean_len: float,
 
 
 def _measure_tok_s(cfg, params, batch: int, kind: str) -> float:
-    import jax.numpy as jnp
-
     from repro.serving.engine import _generate_dense, generate
     prompt = jax.random.randint(jax.random.PRNGKey(batch), (batch, PROMPT),
                                 0, cfg.vocab_size)
-    import time
     if kind == "paged-int8":
         call = lambda: generate(params, cfg, prompt, steps=STEPS,  # noqa: E731
                                 kv_dtype="int8", page_size=PAGE_SIZE)
@@ -88,6 +106,72 @@ def _measure_tok_s(cfg, params, batch: int, kind: str) -> float:
     jax.block_until_ready(toks)
     dt = time.perf_counter() - t0
     return batch * STEPS / dt
+
+
+def _prefix_sharing_entry(cfg, params):
+    """N same-prefix requests through the engine: physical pages vs naive."""
+    from repro.serving.engine import ContinuousBatchingEngine
+    key = jax.random.PRNGKey(7)
+    prefix = jax.random.randint(key, (PREFIX_LEN,), 0, cfg.vocab_size)
+    tail = PAGE_SIZE
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (tail,), 0,
+                                  cfg.vocab_size) for i in range(PREFIX_SEQS)]
+    import jax.numpy as jnp
+    # admission staggers one prefill per step: budget enough decode tokens
+    # that every sequence is still resident when the last one is admitted
+    max_new = PREFIX_SEQS + 2
+    eng = ContinuousBatchingEngine(
+        params, cfg, kv_dtype="int8", page_size=PAGE_SIZE,
+        capacity_tokens=PREFIX_SEQS * 2 * (PREFIX_LEN + tail + max_new))
+    for p in prompts:
+        eng.submit(jnp.concatenate([prefix, p]), max_new)
+    while eng.waiting or eng.prefilling:   # drive until every prompt resides
+        eng.step()
+    stats = eng.pool.shared_page_stats()
+    prefix_pages = PREFIX_LEN // PAGE_SIZE
+    naive = PREFIX_SEQS * prefix_pages
+    entry = {
+        "n_seqs": PREFIX_SEQS, "prefix_tokens": PREFIX_LEN,
+        "page_size": PAGE_SIZE,
+        "shared_prefix_pages": stats["shared_slots"],
+        "naive_prefix_pages": naive,
+        "pages_saved": stats["table_entries"] - stats["distinct_slots"],
+        "prefix_page_ratio": stats["shared_slots"] / naive,
+    }
+    eng.run()
+    return entry
+
+
+def _chunked_prefill_entry(cfg, params):
+    """Engine prefill tokens/s straight into int8 pages (no dense slab)."""
+    from repro.serving.engine import ContinuousBatchingEngine
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (PREFILL_PROMPT,), 0,
+                                cfg.vocab_size)
+
+    def prefill_once():
+        eng = ContinuousBatchingEngine(
+            params, cfg, kv_dtype="int8", page_size=PAGE_SIZE,
+            capacity_tokens=2 * (PREFILL_PROMPT + 1))
+        eng.submit(prompt, 1)
+        steps = 0
+        while eng.waiting or eng.prefilling:
+            eng.step()
+            steps += 1
+        return eng, steps
+
+    # the engine's token sampling host-syncs, so prefill_once returns with
+    # all device work drained — no extra barrier needed before reading t1
+    eng, _ = prefill_once()                 # warm (compile/trace)
+    t0 = time.perf_counter()
+    eng, chunks = prefill_once()
+    dt = time.perf_counter() - t0
+    return {
+        "prompt_tokens": PREFILL_PROMPT,
+        "chunk_tokens": eng.chunk_tokens,
+        "pages_per_step": eng.pages_per_step,
+        "chunk_steps": chunks,
+        "measured_prefill_tok_s": PREFILL_PROMPT / dt,
+    }
 
 
 def rows():
@@ -113,10 +197,37 @@ def rows():
                 f"{tok_s:.1f} tok/s; modeled {by / 1e6:.3f} MB/step "
                 f"(x{by / base:.3f} of dense-bf16)")
         report["batches"].append(entry)
-    b8 = next(e for e in report["batches"] if e["batch"] == 8)
+    b8 = next((e for e in report["batches"] if e["batch"] == 8),
+              report["batches"][-1])
     ratio = b8["kinds"]["paged-int8"]["ratio_vs_dense_bf16"]
     report["paged_int8_vs_dense_bf16_at_b8"] = ratio
+
+    share = _prefix_sharing_entry(cfg, params)
+    report["prefix_sharing"] = share
+    yield csv_row(
+        "decode_serving/prefix_sharing", 0.0,
+        f"{share['n_seqs']} seqs x {share['prefix_tokens']}-tok prefix: "
+        f"{share['shared_prefix_pages']} shared pages vs "
+        f"{share['naive_prefix_pages']} naive "
+        f"({share['pages_saved']} saved)")
+
+    pre = _chunked_prefill_entry(cfg, params)
+    report["chunked_prefill"] = pre
+    yield csv_row(
+        "decode_serving/chunked_prefill", 1e6 / pre["measured_prefill_tok_s"],
+        f"{pre['measured_prefill_tok_s']:.1f} prefill tok/s; "
+        f"chunk {pre['chunk_tokens']} tok, "
+        f"{pre['pages_per_step']} pages/grid-step, no dense KV slab")
+
+    yield f"# paged-int8 / dense-bf16 modeled bytes at b8: {ratio:.3f}"
+    if _TINY:
+        yield "# tiny smoke mode: skipping BENCH_decode.json write"
+        return
     with open(_JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
-    yield f"# paged-int8 / dense-bf16 modeled bytes at b8: {ratio:.3f}"
     yield f"# wrote {os.path.normpath(_JSON_PATH)}"
+
+
+if __name__ == "__main__":
+    for row in rows():
+        print(row)

@@ -353,6 +353,67 @@ def get_page_size(kv_heads: int, head_dim: int, mean_len: int,
     return int(best)
 
 
+# ---------------------------------------------------------------------------
+# Chunked paged-prefill tuning (same persistent cache, ``pprefill|`` keys)
+# ---------------------------------------------------------------------------
+PREFILL_CHUNKS = (64, 128, 256, 512)
+PREFILL_PAGES_PER_STEP = (1, 2, 4, 8)
+
+
+def model_paged_prefill_time_s(kv_heads: int, head_dim: int, page_size: int,
+                               mean_len: int, chunk: int,
+                               pages_per_step: int) -> float:
+    """Analytic v5e per-token time of one layer's chunked paged prefill.
+
+    Each chunk re-streams the sequence's cached pages once (k+v int8 +
+    per-page scales), so bigger chunks amortize the restream; one grid step
+    covers ``pages_per_step`` pages, so bigger steps amortize issue
+    overhead. The (chunk × kv-block) f32 score tile must fit the online-
+    softmax working set in VMEM, which bounds both from above.
+    """
+    n_pages = mean_len / page_size + 0.5
+    page_bytes = 2 * page_size * head_dim + 2 * 4      # int8 k+v + scales
+    hbm = kv_heads * n_pages * page_bytes + chunk * 2 * kv_heads * head_dim * 2
+    steps = kv_heads * math.ceil(n_pages / pages_per_step)
+    scores = chunk * pages_per_step * page_size * 4    # f32 score tile
+    acc = chunk * head_dim * 4 * 2                     # acc + q resident
+    if scores + acc > VMEM_BYTES // 4:
+        return float("inf")
+    return (hbm / _HBM_BW + steps * _STEP_OVERHEAD_S) / chunk
+
+
+def get_prefill_params(kv_heads: int, head_dim: int, page_size: int,
+                       mean_len: int, *, timer: Optional[Callable] = None,
+                       save: bool = True) -> Tuple[int, int]:
+    """Cached (chunk_tokens, pages_per_step) pick for chunked paged prefill.
+
+    Lives in the same JSON cache as the GEMM blocks (its own ``pprefill|``
+    key space). ``timer(chunk, pages_per_step)`` overrides the analytic
+    scorer (tests use this).
+    """
+    key = (f"pprefill|kv{kv_heads}|hd{head_dim}|ps{page_size}"
+           f"|len{mean_len}|{_backend()}")
+    with _lock:
+        _load_disk()
+        hit = _mem_cache.get(key)
+    if hit is not None:
+        return int(hit["chunk"]), int(hit["pages_per_step"])
+    score = timer or (lambda c, pp: model_paged_prefill_time_s(
+        kv_heads, head_dim, page_size, mean_len, c, pp))
+    scores = {(c, pp): score(c, pp)
+              for c in PREFILL_CHUNKS for pp in PREFILL_PAGES_PER_STEP}
+    best = min(scores, key=scores.get)
+    with _lock:
+        _load_disk()
+        _mem_cache[key] = {"chunk": int(best[0]),
+                           "pages_per_step": int(best[1]),
+                           "source": "timer" if timer else "model",
+                           "t_us": scores[best] * 1e6}
+        if save:
+            _save_disk()
+    return int(best[0]), int(best[1])
+
+
 def get_blocks(kind: str, m: int, n: int, k: int, *, fused: bool = False,
                a_in_bytes: int = 4,
                allow_measure: bool = False) -> Tuple[int, int, int]:

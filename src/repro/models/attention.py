@@ -27,11 +27,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.models.config import ModelConfig
 from repro.models.modules import apply_rope, linear, rms_norm, rope_freqs
 from repro.parallel.sharding import logical
 from repro.serving.kv_cache import (DEFAULT_PAGE_SIZE, DenseKVCache,
-                                    PagedDecodeCache)
+                                    PagedDecodeCache, PagedPrefillCache)
 
 _NEG = -1e30
 
@@ -85,6 +86,9 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     * cache None                        → full causal self-attention (train).
     * DenseKVCache, S > 1               → prefill: attend + fill cache[0:S].
     * DenseKVCache, S == 1, cache_pos   → decode: append + attend over prefix.
+    * PagedPrefillCache                 → chunked paged prefill: quantize the
+      chunk's KV straight into block-table pages, causal flash attention
+      over every cached page (no dense KV staging slab).
     * PagedDecodeCache, S == 1          → ragged decode: append to block-table
       pages + paged int8 attention (per-sequence positions, no cache_pos).
     """
@@ -106,6 +110,19 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     q = logical(q, "batch", "seq", "heads", "head_dim")
     k = logical(k, "batch", "seq", "kv_heads", "head_dim")
     v = logical(v, "batch", "seq", "kv_heads", "head_dim")
+
+    if isinstance(cache, PagedPrefillCache):
+        assert b == 1, "paged prefill runs one sequence's chunk at a time"
+        new_cache = cache.write_chunk(jnp.swapaxes(k, 1, 2),
+                                      jnp.swapaxes(v, 1, 2))
+        qp = jnp.transpose(q.reshape(s, kv, g, hd), (1, 0, 2, 3))
+        ctx = paged_prefill_attention(
+            qp, new_cache.k_pages, new_cache.v_pages, new_cache.k_scale,
+            new_cache.v_scale, new_cache.table, q_start=new_cache.q_start,
+            pages_per_step=new_cache.pages_per_step)
+        out = jnp.transpose(ctx, (1, 0, 2, 3)).reshape(1, s, h * hd)
+        y = linear(out, p["wo"], qmode=qmode)
+        return y, new_cache
 
     if isinstance(cache, PagedDecodeCache):
         assert s == 1, "paged cache is decode-only (one token per sequence)"

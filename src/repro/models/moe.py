@@ -11,9 +11,13 @@ Sharding: groups (G) carry the data axis, experts (E) the model axis. Under
 GSPMD the combine-gather of the (G,E,C,D) expert outputs becomes the MoE
 all-to-all/all-gather — visible in the dry-run collective schedule.
 
-Quantized serving path (CAMP): per-expert batched int8 GEMMs with Cartesian
-(expert, row) × (expert, col) scales — the 3-D generalization of the paper's
-kernel.
+Quantized serving path (CAMP): per-expert int8/int4 GEMMs dispatched through
+the **fused CAMP kernel family** (:mod:`repro.kernels.ops`) — activation
+quantization happens inside each expert's GEMM, block sizes come from the
+persistent autotune cache (the expert shapes
+``serving.engine.warm_gemm_autotune`` pre-tunes), and the Cartesian
+(expert, row) × (expert, col) scale epilogue is the 3-D generalization of
+the paper's kernel.
 """
 from __future__ import annotations
 
@@ -26,6 +30,25 @@ from repro.parallel.sharding import logical
 
 MOE_MIN_CAPACITY = 8
 MOE_GROUP_SIZE = 4096  # tokens per routing group
+
+
+def routing_group_size(n_tokens: int) -> int:
+    """Largest group size ≤ MOE_GROUP_SIZE that divides ``n_tokens``
+    (shared with the autotune warmup so pre-tuned expert GEMM shapes match
+    the served ones)."""
+    sg = min(MOE_GROUP_SIZE, n_tokens)
+    while n_tokens % sg:
+        sg //= 2
+    return sg
+
+
+def expert_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    """Expert slot count for one routing group (shared with the autotune
+    warmup so pre-tuned expert GEMM shapes match the served ones)."""
+    cap = max(MOE_MIN_CAPACITY,
+              int((tokens_per_group * cfg.moe_top_k * cfg.moe_capacity_factor)
+                  / cfg.moe_experts))
+    return min(-(-cap // 4) * 4, tokens_per_group * cfg.moe_top_k)
 
 
 def init_moe(key, cfg: ModelConfig, dtype) -> dict:
@@ -58,28 +81,38 @@ def _dequant_expert(w: QuantizedTensor) -> jax.Array:
 
 
 def _expert_matmul(xe: jax.Array, w, qmode: str) -> jax.Array:
-    """Batched per-expert GEMM: (..., E, C, K) × (E, K, N) → (..., E, C, N)."""
+    """Batched per-expert GEMM: (..., E, C, K) × (E, K, N) → (..., E, C, N).
+
+    Integer modes dispatch each expert through the **fused CAMP GEMM
+    family** (``ops.gemm_*_fused``): activations quantize inside the kernel
+    (the int8/int4 payload and row scales never exist in HBM) and block
+    sizes come from the persistent autotune cache — the expert shapes
+    ``warm_gemm_autotune`` pre-populates — instead of a hardcoded triple.
+    """
     if not isinstance(w, QuantizedTensor):
         return jnp.einsum("...eck,ekn->...ecn", xe, w.astype(xe.dtype))
     if qmode in ("w8a16", "w4a16", "none"):
         wd = _dequant_expert(w)
         return jnp.einsum("...eck,ekn->...ecn", xe, wd.astype(xe.dtype))
-    # integer path: dynamic per-row activation quant + batched int8 dot
-    from repro.core.quant import INT8_QMAX, unpack_int4
-    absmax = jnp.max(jnp.abs(xe), axis=-1, keepdims=True).astype(jnp.float32)
-    a_s = jnp.where(absmax == 0.0, 1.0, absmax / INT8_QMAX)      # (...,E,C,1)
-    a_q = jnp.clip(jnp.round(xe.astype(jnp.float32) / a_s),
-                   -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
-    w_q = w.q if w.bits == 8 else jax.vmap(lambda m: unpack_int4(m))(w.q)
+    # integer path: per-expert fused quantize+GEMM (python-unrolled over E —
+    # each expert is one CAMP kernel launch with its own tuned blocks)
+    from repro.kernels import ops
     lead = xe.shape[:-3]
     e, c, kk = xe.shape[-3:]
-    aq2 = jnp.moveaxis(a_q.reshape((-1,) + (e, c, kk)), 0, 1)     # (E,L,C,K)
-    aq2 = aq2.reshape(e, -1, kk)                                  # (E,L*C,K)
-    acc = jax.lax.dot_general(aq2, w_q, (((2,), (1,)), ((0,), (0,))),
-                              preferred_element_type=jnp.int32)   # (E,L*C,N)
+    x2 = jnp.moveaxis(xe.reshape((-1,) + (e, c, kk)), 0, 1)       # (E,L,C,K)
+    x2 = x2.reshape(e, -1, kk)                                    # (E,L*C,K)
+    if w.bits == 8:
+        gemm = ops.gemm_i8_fused
+    elif qmode == "w4a4":
+        gemm = ops.gemm_a4w4_fused
+    else:
+        gemm = ops.gemm_w4_fused
+    outs = [gemm(x2[ei], w.q[ei], w.scale[ei], out_dtype=jnp.float32)
+            for ei in range(e)]
+    acc = jnp.stack(outs)                                         # (E,L*C,N)
     n = acc.shape[-1]
     acc = jnp.moveaxis(acc.reshape(e, -1, c, n), 1, 0).reshape(lead + (e, c, n))
-    return (acc.astype(jnp.float32) * a_s * w.scale).astype(xe.dtype)
+    return acc.astype(xe.dtype)
 
 
 def _route(gates: jax.Array, k: int, cap: int):
@@ -106,12 +139,9 @@ def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array, *, qmode: str = "none"):
     b, s, d = x.shape
     e, k = cfg.moe_experts, cfg.moe_top_k
     t = b * s
-    sg = min(MOE_GROUP_SIZE, t)
-    while t % sg:
-        sg //= 2
+    sg = routing_group_size(t)
     g = t // sg
-    cap = max(MOE_MIN_CAPACITY, int((sg * k * cfg.moe_capacity_factor) / e))
-    cap = min(-(-cap // 4) * 4, sg * k)
+    cap = expert_capacity(sg, cfg)
 
     xg = x.reshape(g, sg, d)
     logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)

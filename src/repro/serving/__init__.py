@@ -1,4 +1,12 @@
-"""Serving stack: paged quantized KV cache + continuous-batching engine.
+"""Serving stack: one paged, quantized KV representation end to end.
+
+The :class:`~repro.serving.kv_cache.PagePool` is the only KV store the
+continuous-batching engine touches: chunked prefill quantizes straight into
+refcounted pages (:class:`~repro.serving.kv_cache.PagedPrefillCache`, no
+dense staging slab), ragged decode appends to them
+(:class:`~repro.serving.kv_cache.PagedDecodeCache`), prompts sharing a
+prefix share physical pages through a trie, and all writes cross a
+copy-on-write barrier.
 
 Engine symbols are re-exported lazily (PEP 562): ``repro.models.attention``
 imports :mod:`repro.serving.kv_cache` at module scope, and an eager
@@ -8,6 +16,7 @@ imports :mod:`repro.serving.kv_cache` at module scope, and an eager
 from repro.serving.kv_cache import (  # noqa: F401
     DenseKVCache,
     PagedDecodeCache,
+    PagedPrefillCache,
     PagePool,
 )
 

@@ -6,17 +6,24 @@ stream and the paged int8 KV cache (:mod:`repro.serving.kv_cache`) cuts the
 cache stream — decode reads only the pages a sequence occupies, at one byte
 per element, dequantized in-register by the paged-attention kernel.
 
+The paged pool is the **only** KV representation end to end: prefill is
+**chunked** and writes quantized pages directly through
+:class:`~repro.serving.kv_cache.PagedPrefillCache` (no dense per-request KV
+staging slab exists anywhere in the engine), decode appends to the same
+pages, and prompts sharing a prefix share physical pages copy-on-write.
+
 Two serving modes:
 
 * :class:`ContinuousBatchingEngine` — sequences are admitted and finished
-  **mid-flight** over a shared page pool: ``submit()`` queues a request,
-  every ``step()`` first admits whatever fits (prefill runs densely per
-  request, then its KV is quantized page-by-page into the pool) and then
-  runs one ragged decode over all active sequences (per-sequence positions
-  and block tables; no padding to a common length). Finished sequences
-  return their pages to the free list immediately, so a long request no
-  longer holds the batch hostage. ``generate()`` is a thin batch wrapper on
-  top.
+  **mid-flight** over a shared page pool: ``submit()`` queues a request;
+  every ``step()`` admits what fits (reserving only the pages a prefix
+  lookup could not share), advances the head prefill by one autotuned
+  chunk, and runs one ragged decode over all active sequences (per-sequence
+  positions and block tables; no padding to a common length) — so a long
+  prompt no longer stalls decode for the whole batch, and a long request no
+  longer holds the batch hostage. Finished sequences decref their pages;
+  slots return to the free list when the last sharer is done.
+  ``generate()`` is a thin batch wrapper on top.
 * the dense-slab path (``build_prefill_step`` / ``build_decode_step``) —
   the degenerate single-block-table case, kept for hybrid/recurrent mixers
   (SSM/RWKV carry non-KV state) and for the multi-pod dry-run cells.
@@ -57,16 +64,16 @@ def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
     M = batch × prompt_len; both hit the same (K, N) weight shapes. Tuning
     them here — measured on a live TPU, analytic elsewhere — populates the
     persistent autotune cache so the request path never tunes. Covered:
-    attention q/kv/out, dense MLP up/gate/down, MoE expert up/gate/down
-    (``(d, expert_ff)`` / ``(expert_ff, d)``), and the untied lm head.
-    Note: today's expert compute is a batched einsum that bypasses the CAMP
-    GEMM dispatch — the expert entries pre-populate the cache for the
-    planned per-expert CAMP routing (see ROADMAP follow-ups), they are not
-    read by the current einsum path. Mixer-specific extras (SSM/RWKV
-    projections) still cold-tune on first sight.
+    attention q/kv/out, dense MLP up/gate/down, MoE expert up/gate/down at
+    the **expert-capacity M** the per-expert fused CAMP dispatch in
+    :mod:`repro.models.moe` actually runs, and the untied lm head.
+    Mixer-specific extras (SSM/RWKV projections) still cold-tune on first
+    sight.
 
     Returns [((m, n, k), (bm, bn, bk)), ...] for logging.
     """
+    from repro.models.moe import expert_capacity, routing_group_size
+
     kind = _QMODE_KIND.get(cfg.qmode)
     if kind is None:  # 'none' / weight-only: bf16 matmul, nothing to tune
         return []
@@ -77,19 +84,24 @@ def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
         (hd * cfg.n_heads, d),                             # attn out
         (d, cfg.d_ff), (cfg.d_ff, d),                      # mlp up/gate/down
     }
-    if cfg.moe_experts:
-        proj |= {(d, cfg.expert_ff), (cfg.expert_ff, d)}   # expert up/gate/down
     if not cfg.tie_embeddings:
         proj.add((d, cfg.vocab_size))                      # quantized lm head
     ms = sorted({b * max(prefill_len, 1) for b in batch_sizes} |
                 set(batch_sizes))
+    shapes = {(m, n, k) for m in ms for (k, n) in proj}
+    if cfg.moe_experts:
+        # expert GEMMs run at M = groups × capacity, not M = tokens
+        eproj = ((d, cfg.expert_ff), (cfg.expert_ff, d))   # up/gate | down
+        for m in ms:
+            sg = routing_group_size(m)
+            em = (m // sg) * expert_capacity(sg, cfg)
+            shapes |= {(max(em, 1), n, k) for (k, n) in eproj}
     out = []
-    for m in ms:
-        for (k, n) in sorted(proj):
-            blk = autotune.tune(kind, m, n, k, fused=True,
-                                a_in_bytes=a_in_bytes, measure=measure,
-                                save=False)
-            out.append(((m, n, k), blk))
+    for (m, n, k) in sorted(shapes):
+        blk = autotune.tune(kind, m, n, k, fused=True,
+                            a_in_bytes=a_in_bytes, measure=measure,
+                            save=False)
+        out.append(((m, n, k), blk))
     autotune.flush()  # one disk write for the whole warmup
     return out
 
@@ -137,7 +149,13 @@ class Request:
     prompt: jax.Array                    # (S,) int32
     max_new_tokens: int
     tokens: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                         # prompt tokens cached so far
     done: bool = False
+
+    def __post_init__(self):
+        # host-side token tuple: prefix-trie keys + chunk slicing without
+        # device round-trips per step
+        self.prompt_tokens = tuple(np.asarray(self.prompt).tolist())
 
     @property
     def reserve_tokens(self) -> int:
@@ -148,31 +166,42 @@ class ContinuousBatchingEngine:
     """Admit/finish sequences mid-flight over a shared paged KV pool.
 
     Scheduling is conservative: a request is admitted only when the pool can
-    reserve its worst-case page count (prompt + max_new_tokens), so an
-    admitted sequence can never stall mid-decode waiting for pages. Each
-    ``step()``:
+    reserve its worst-case page count (prompt + max_new_tokens, minus the
+    prefix pages a trie lookup can share), so an admitted sequence can never
+    stall mid-decode waiting for pages. Each ``step()``:
 
-    1. admits queued requests in FIFO order while reservations fit — each
-       admission runs a batch-1 dense prefill (exact, model dtype) and
-       quantizes the resulting KV page-by-page into the pool;
-    2. runs **one ragged decode** over every active sequence: per-sequence
+    1. admits the next queued request once the prefill lane is clear —
+       admission looks up the prompt in the pool's prefix trie, **shares**
+       the pages of any registered prefix (refcounted, copy-on-write) and
+       reserves only the remainder; admitting one prefill at a time lets a
+       burst of same-prefix prompts share the pages the first one writes;
+    2. advances the head prefill by one autotuned **chunk** (``pprefill|``
+       autotune keys): the chunk's KV quantizes straight into the
+       sequence's pages and attends over the cached prefix through the
+       chunked paged-prefill kernel — no dense per-request KV slab exists,
+       and a 32k prompt no longer blocks the batch for its whole prefill;
+    3. runs **one ragged decode** over every active sequence: per-sequence
        positions, per-sequence block tables, one forward pass — attention
        goes through the paged int8 kernel, so a step's HBM traffic is the
        pages actually occupied, not ``batch × max_len``;
-    3. retires sequences that hit their token budget and returns their pages
-       to the free list, making room for the next admission.
+    4. retires sequences that hit their token budget and decrefs their
+       pages — a slot returns to the free list when its last sharer is done.
 
     Per-sequence results are independent of co-scheduling: pages are owned
-    exclusively, per-page scales depend only on a page's own content,
-    attention is masked per sequence length, and sampling keys are derived
-    per (seq_id, token index) — a sequence decodes identically whether it
-    runs alone or inside a changing batch.
+    exclusively or shared immutably (every write path crosses the pool's
+    copy-on-write barrier), per-page scales depend only on a page's own
+    content, attention is masked per sequence length, chunk boundaries
+    depend only on the engine's static chunk size, and sampling keys are
+    derived per (seq_id, token index) — a sequence decodes identically
+    whether it runs alone or inside a changing batch.
     """
 
     def __init__(self, params, cfg: ModelConfig, *,
                  kv_dtype: Optional[str] = "int8",
                  page_size: Optional[int] = None,
                  capacity_tokens: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 pages_per_step: Optional[int] = None,
                  sample: str = "greedy", temperature: float = 1.0,
                  key: Optional[jax.Array] = None):
         mixers = {cfg.mixer_of(i) for i in range(cfg.n_layers)}
@@ -183,16 +212,25 @@ class ContinuousBatchingEngine:
         self.params, self.cfg = params, cfg
         self.sample, self.temperature = sample, temperature
         self.key = jax.random.PRNGKey(0) if key is None else key
-        # page size comes from the persistent autotune cache (analytic v5e
-        # model off-TPU) unless pinned by the caller
+        # page size / prefill chunking come from the persistent autotune
+        # cache (analytic v5e model off-TPU) unless pinned by the caller
+        mean_len = max(cfg.max_seq_len // 2, 128)
         ps = page_size or autotune.get_page_size(
-            cfg.n_kv_heads, cfg.hd, mean_len=max(cfg.max_seq_len // 2, 128))
+            cfg.n_kv_heads, cfg.hd, mean_len=mean_len)
+        chunk, pp = autotune.get_prefill_params(
+            cfg.n_kv_heads, cfg.hd, ps, mean_len=mean_len)
+        chunk = prefill_chunk or chunk
+        # non-final chunks must cover whole pages so a partial page is
+        # quantized exactly once (by the final chunk)
+        self.chunk_tokens = max(ps, chunk - chunk % ps)
+        self.pages_per_step = pages_per_step or pp
         capacity_tokens = capacity_tokens or 8 * cfg.max_seq_len
         self.pool = kvc.PagePool(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
             num_pages=-(-capacity_tokens // ps), page_size=ps,
             quantized=(kv_dtype == "int8"), dtype=jnp.dtype(cfg.dtype))
         self.waiting: collections.deque = collections.deque()
+        self.prefilling: collections.deque = collections.deque()
         self.active: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._next_id = 0
@@ -230,26 +268,19 @@ class ContinuousBatchingEngine:
         req.done = True
         self.finished[req.seq_id] = req
 
-    def _prefill(self, req: Request) -> None:
-        """Batch-1 dense prefill, then quantize KV into the pool's pages."""
-        s = int(req.prompt.shape[0])
-        self.pool.reserve(req.seq_id, req.reserve_tokens)
-        caches = init_caches(self.cfg, 1, s)
-        logits, caches, _ = forward(self.params, self.cfg, req.prompt[None],
-                                    caches=caches, last_logits_only=True)
-        for i, layer in enumerate(caches):
-            dense = layer["attn"]
-            self.pool.ingest(req.seq_id, i, dense.k, dense.v)
-        req.tokens.append(int(self._sample_tokens(logits[:, -1], [req])[0]))
-        if len(req.tokens) >= req.max_new_tokens:
-            self._finish(req)
-        else:
-            self.active.append(req)
-
     def _admit(self) -> None:
-        while self.waiting:
+        """Admit the next queued request once the prefill lane is clear.
+
+        One prefill in flight at a time: by the time the next request is
+        admitted, the previous prompt's full pages are registered in the
+        prefix trie, so a burst of same-prefix prompts shares pages instead
+        of each writing its own copy. Admission reserves only the pages the
+        prefix lookup could not share.
+        """
+        while self.waiting and not self.prefilling:
             nxt: Request = self.waiting[0]
-            if not self.pool.can_reserve(nxt.reserve_tokens):
+            if not self.pool.can_reserve(nxt.reserve_tokens,
+                                         prompt=nxt.prompt_tokens):
                 if not self.active:
                     raise RuntimeError(
                         f"request {nxt.seq_id} needs "
@@ -257,12 +288,74 @@ class ContinuousBatchingEngine:
                         f"pool has {self.pool.num_pages} total")
                 break
             self.waiting.popleft()
-            self._prefill(nxt)
+            nxt.pos = self.pool.reserve(nxt.seq_id, nxt.reserve_tokens,
+                                        prompt=nxt.prompt_tokens)
+            self.prefilling.append(nxt)
+
+    def _run_prefill_chunk(self, req: Request, chunk: int,
+                           need_logits: bool):
+        """One chunk of paged prefill: tokens [pos, pos+chunk) straight into
+        the pool's pages (no dense staging slab)."""
+        t0 = req.pos
+        toks = req.prompt[None, t0:t0 + chunk]
+        positions = (t0 + jnp.arange(chunk))[None]
+        caches = [{"attn": self.pool.prefill_cache(i, req.seq_id, t0,
+                                                   self.pages_per_step)}
+                  for i in range(self.cfg.n_layers)]
+        if need_logits:
+            logits, new_caches, _ = forward(
+                self.params, self.cfg, toks, positions=positions,
+                caches=caches, last_logits_only=True)
+        else:
+            # mid-prompt chunk: skip the vocabulary head entirely
+            logits, new_caches, _ = forward(
+                self.params, self.cfg, toks, positions=positions,
+                caches=caches, return_hidden=True)
+            logits = None
+        for i, layer in enumerate(new_caches):
+            self.pool.writeback(i, layer["attn"])
+        self.pool.lens[req.seq_id] = t0 + chunk
+        req.pos = t0 + chunk
+        return logits
+
+    def _prefill_step(self) -> None:
+        """Advance the head prefill by up to ``chunk_tokens`` prompt tokens.
+
+        Non-final chunks are page-aligned, so every page is quantized
+        exactly once; the final chunk registers the prompt's full pages in
+        the prefix trie and moves the request to the decode lane.
+        """
+        budget = self.chunk_tokens
+        while budget > 0 and self.prefilling:
+            req: Request = self.prefilling[0]
+            s = int(req.prompt.shape[0])
+            remaining = s - req.pos
+            chunk = min(budget, remaining)
+            if chunk < remaining:
+                chunk -= chunk % self.pool.page_size
+                if chunk == 0:
+                    break        # leftover budget smaller than one page
+            logits = self._run_prefill_chunk(req, chunk,
+                                             need_logits=(req.pos + chunk == s))
+            budget -= chunk
+            if req.pos < s:
+                continue
+            self.prefilling.popleft()
+            self.pool.register_prefix(req.seq_id, req.prompt_tokens)
+            req.tokens.append(int(self._sample_tokens(logits[:, -1], [req])[0]))
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(req)
+            else:
+                self.active.append(req)
 
     def _decode(self) -> None:
         """One ragged decode step over all active sequences."""
         reqs = list(self.active)
         seq_ids = [r.seq_id for r in reqs]
+        ps = self.pool.page_size
+        for r in reqs:
+            # COW barrier: the page this append touches must be exclusive
+            self.pool.ensure_writable(r.seq_id, self.pool.lens[r.seq_id] // ps)
         tokens = jnp.asarray([[r.tokens[-1]] for r in reqs], jnp.int32)
         tables, lengths = self.pool.batch_tables(seq_ids)
         caches = [{"attn": self.pool.layer_cache(i, tables, lengths)}
@@ -285,11 +378,19 @@ class ContinuousBatchingEngine:
 
     # -- driving ---------------------------------------------------------
     def step(self) -> bool:
-        """Admit what fits, then one decode step. True while work remains."""
+        """Admit what fits, one prefill chunk, one ragged decode step.
+
+        Returns True while work remains. Prefill chunks and decode steps
+        interleave 1:1 under the chunk token budget, so time-to-first-token
+        for queued prompts and inter-token latency for running sequences
+        both stay bounded regardless of prompt length.
+        """
         self._admit()
+        if self.prefilling:
+            self._prefill_step()
         if self.active:
             self._decode()
-        return bool(self.active or self.waiting)
+        return bool(self.active or self.waiting or self.prefilling)
 
     def run(self) -> Dict[int, List[int]]:
         """Drain all queued/active requests; {seq_id: generated tokens}."""

@@ -16,18 +16,33 @@ KV cache. Two orthogonal reductions live here:
   finish sequences mid-flight by moving pages between the free list and
   block tables (the vLLM PagedAttention memory model).
 
-Three cache types:
+The pool is the **only** KV representation in the serving engine — prefill
+writes straight into pages (chunk by chunk, no dense staging slab) and decode
+appends to them. Pages are **reference counted**: sequences whose prompts
+share a prefix share the physical pages holding it (a trie keyed by
+page-sized token chunks maps prompt prefixes to page chains), and
+:meth:`PagePool.fork` clones a sequence in O(1) by increffing its table.
+Writes go through :meth:`PagePool.ensure_writable`, which copies a page only
+on the first divergent write (copy-on-write).
 
-* :class:`DenseKVCache` — the (B, KV, T, hd) slab, used by prefill and as
-  the degenerate single-block-table case (training / legacy decode paths are
-  untouched). Quantized variants view the slab as ``T // page_size`` pages so
+Cache types:
+
+* :class:`DenseKVCache` — the (B, KV, T, hd) slab, used by the legacy
+  dense serving path (SSM/RWKV mixers, multi-pod dry-run cells) and
+  training. Quantized variants view the slab as ``T // page_size`` pages so
   the scale handling is identical to the pool's.
 * :class:`PagePool` — host-side page allocator: per-layer page arrays, a
-  free list, per-sequence block tables and lengths.
+  free list, per-slot refcounts, per-sequence block tables and lengths,
+  and the prefix-sharing trie.
 * :class:`PagedDecodeCache` — a per-layer, per-decode-step pytree view
   (pages + scales + batched block table + lengths) that flows through
   ``forward``; :mod:`repro.models.attention` appends to it and runs the
   paged-attention kernel over it.
+* :class:`PagedPrefillCache` — a per-layer, per-prefill-chunk pytree view
+  (pages + scales + one sequence's block table + the chunk's start token):
+  :mod:`repro.models.attention` quantizes the chunk's KV into the owned
+  pages and runs the chunked paged-prefill kernel
+  (:mod:`repro.kernels.paged_prefill`) over the whole cached prefix.
 
 All int8 conversion in the repo funnels through :func:`quantize_int8` /
 :func:`dequantize_int8` here (previously duplicated between
@@ -68,6 +83,21 @@ def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _chunk_to_pages(x: jax.Array, n_pages: int, page_size: int) -> jax.Array:
+    """(1, KV, S, hd) float → (n_pages, KV, page_size, hd) f32 page block,
+    zero-padded past S (the one pipeline all pool page-writes go through)."""
+    kv, s, hd = x.shape[1], x.shape[2], x.shape[3]
+    pad = n_pages * page_size - s
+    x = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))[0]
+    return jnp.swapaxes(x.reshape(kv, n_pages, page_size, hd), 0, 1)
+
+
+def _quantize_page_block(xp: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(np, KV, ps, hd) f32 → (int8 payload, (np, KV) per-page scales)."""
+    sc = int8_scale(xp, axes=(2, 3))
+    return quantize_int8(xp, sc[..., None, None]), sc
 
 
 def _quantize_pages(x: jax.Array, page_size: int) -> Tuple[jax.Array, jax.Array]:
@@ -296,10 +326,99 @@ jax.tree_util.register_pytree_node(PagedDecodeCache, _paged_flatten,
 
 
 # ---------------------------------------------------------------------------
+# Paged prefill view (flows through forward() during one prefill chunk)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PagedPrefillCache:
+    """One attention layer's paged KV for one sequence's prefill chunk.
+
+    ``k_pages``/``v_pages``/``k_scale``/``v_scale``: the pool's per-layer
+    arrays (see :class:`PagedDecodeCache`). ``table``: (max_pages,) int32 —
+    this sequence's block table. ``q_start``: tokens already cached before
+    this chunk (static; the engine keeps it page-aligned so a chunk only
+    ever writes whole fresh pages plus, for the final chunk, one partial
+    page quantized exactly once). ``pages_per_step``: kv pages fetched per
+    grid step by the prefill kernel (autotuned, static).
+    """
+    k_pages: jax.Array
+    v_pages: jax.Array
+    k_scale: Optional[jax.Array]
+    v_scale: Optional[jax.Array]
+    table: jax.Array
+    q_start: int
+    pages_per_step: int = 1
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    def write_chunk(self, k_t: jax.Array, v_t: jax.Array) -> "PagedPrefillCache":
+        """Quantize a chunk's KV (1, KV, C, hd) into pages [q_start, q_start+C).
+
+        Every page written here is exclusively owned (prefix-shared pages
+        cover only the tokens the engine skipped), so no COW is needed on
+        this path. The trailing pad of a partial final page stays zero; a
+        later decode append requantizes that page through
+        :meth:`PagedDecodeCache.append`, which masks the stale tail.
+        """
+        ps = self.page_size
+        c = k_t.shape[2]
+        if self.q_start % ps:
+            raise ValueError(f"chunk start {self.q_start} not page-aligned")
+        p0 = self.q_start // ps
+        n_w = -(-c // ps)
+        slots = jax.lax.dynamic_slice(self.table, (p0,), (n_w,))
+
+        def upd(pages, scales, x):
+            xp = _chunk_to_pages(x, n_w, ps)
+            if scales is None:
+                return pages.at[slots].set(xp.astype(pages.dtype)), None
+            xq, sc = _quantize_page_block(xp)
+            return pages.at[slots].set(xq), scales.at[slots].set(sc)
+
+        k_pages, k_scale = upd(self.k_pages, self.k_scale, k_t)
+        v_pages, v_scale = upd(self.v_pages, self.v_scale, v_t)
+        return dataclasses.replace(self, k_pages=k_pages, v_pages=v_pages,
+                                   k_scale=k_scale, v_scale=v_scale)
+
+
+def _pprefill_flatten(c: PagedPrefillCache):
+    return (c.k_pages, c.v_pages, c.k_scale, c.v_scale, c.table), \
+        (c.q_start, c.pages_per_step)
+
+
+def _pprefill_unflatten(aux, children):
+    kp, vp, ks, vs, table = children
+    return PagedPrefillCache(k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+                             table=table, q_start=aux[0], pages_per_step=aux[1])
+
+
+jax.tree_util.register_pytree_node(PagedPrefillCache, _pprefill_flatten,
+                                   _pprefill_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-sharing trie (one node per full page of prompt tokens)
+# ---------------------------------------------------------------------------
+class _PrefixNode:
+    """Trie node: one physical page holding one page-sized token chunk."""
+    __slots__ = ("slot", "children")
+
+    def __init__(self, slot: int):
+        self.slot = slot
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+
+
+# ---------------------------------------------------------------------------
 # Page pool (host-side allocator shared by all layers of a model)
 # ---------------------------------------------------------------------------
 class PagePool:
-    """Fixed pool of KV pages + free-list allocation + per-seq block tables.
+    """Fixed pool of KV pages + refcounted free-list allocation + per-seq
+    block tables + a prefix-sharing trie.
 
     One logical page slot spans every layer (each layer keeps its own
     (P, KV, ps, hd) arrays; a sequence's block table indexes all of them),
@@ -307,6 +426,17 @@ class PagePool:
     Admission control is conservative: :meth:`reserve` claims the worst-case
     page count for a sequence up front, so a running sequence can never
     deadlock the pool mid-decode.
+
+    **Sharing.** Every slot carries a refcount (table references only — the
+    trie holds no references of its own). :meth:`reserve` with a prompt
+    first walks the trie (:meth:`match_prefix`) and shares the pages of the
+    longest registered full-page prefix instead of allocating them;
+    :meth:`fork` clones a whole sequence by increffing its table. Shared
+    pages are immutable through any table: all writers must go through
+    :meth:`ensure_writable`, which copies the page to a fresh slot on the
+    first divergent write (COW) and drops stale trie entries. A slot
+    returns to the free list — and falls out of the trie — only when its
+    last reference dies.
     """
 
     def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
@@ -337,8 +467,11 @@ class PagePool:
             self.k_scale = [None] * n_layers
             self.v_scale = [None] * n_layers
         self.free: List[int] = list(range(num_pages))
+        self.ref: List[int] = [0] * num_pages
         self.tables: Dict[int, List[int]] = {}
         self.lens: Dict[int, int] = {}
+        self._prefix_root = _PrefixNode(-1)
+        self._prefix_nodes: Dict[int, Tuple[_PrefixNode, Tuple[int, ...]]] = {}
 
     # -- accounting ------------------------------------------------------
     @property
@@ -348,8 +481,10 @@ class PagePool:
     def pages_for(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.page_size))
 
-    def can_reserve(self, n_tokens: int) -> bool:
-        return self.pages_for(n_tokens) <= self.num_free
+    def can_reserve(self, n_tokens: int, prompt=None) -> bool:
+        """Would :meth:`reserve` succeed? (the one copy of the fit formula)"""
+        shared = self.match_prefix(prompt)[1] if prompt is not None else []
+        return self.pages_for(n_tokens) - len(shared) <= self.num_free
 
     def page_bytes(self) -> int:
         """HBM bytes one page slot occupies across all layers (k + v)."""
@@ -358,53 +493,211 @@ class PagePool:
         scale = 2 * 4 * self.n_kv_heads if self.quantized else 0
         return self.n_layers * (2 * per * itemsize + scale)
 
+    # -- prefix trie -----------------------------------------------------
+    def match_prefix(self, tokens) -> Tuple[int, List[int]]:
+        """Longest registered full-page prefix of ``tokens`` → (n, slots).
+
+        Matching is capped at the last full page *strictly before* the final
+        prompt token, so an admitted sequence always prefills at least one
+        token (it needs logits at the last position to sample from).
+        """
+        ps = self.page_size
+        limit = max(0, (len(tokens) - 1) // ps)
+        node, slots = self._prefix_root, []
+        for i in range(limit):
+            nxt = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if nxt is None:
+                break
+            slots.append(nxt.slot)
+            node = nxt
+        return len(slots) * ps, slots
+
+    def register_prefix(self, seq_id: int, tokens) -> int:
+        """Index a prefilled prompt's full pages for future sharing.
+
+        Only the prompt's full pages are registered — they are immutable
+        from here on (decode appends land at page ``len(prompt) // ps``,
+        which is never one of them). Existing nodes win, so all sequences
+        carrying a popular prefix converge on one physical page chain.
+        Returns the number of pages newly indexed.
+        """
+        ps = self.page_size
+        node, table, added = self._prefix_root, self.tables[seq_id], 0
+        for i in range(len(tokens) // ps):
+            chunk = tuple(tokens[i * ps:(i + 1) * ps])
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                slot = table[i]
+                if slot in self._prefix_nodes:       # already indexed elsewhere
+                    break
+                nxt = _PrefixNode(slot)
+                node.children[chunk] = nxt
+                self._prefix_nodes[slot] = (node, chunk)
+                added += 1
+            node = nxt
+        return added
+
+    def _prefix_forget(self, slot: int) -> None:
+        """Drop a slot's trie entry (it is being freed or rewritten)."""
+        loc = self._prefix_nodes.pop(slot, None)
+        if loc is None:
+            return
+        parent, key = loc
+        node = parent.children.get(key)
+        if node is not None and node.slot == slot:
+            del parent.children[key]
+
     # -- alloc / free ----------------------------------------------------
-    def reserve(self, seq_id: int, n_tokens: int) -> None:
-        """Claim pages covering ``n_tokens`` worst-case for a new sequence."""
+    def _incref(self, slot: int) -> None:
+        if self.ref[slot] <= 0:
+            raise RuntimeError(f"incref of free page {slot}")
+        self.ref[slot] += 1
+
+    def _decref(self, slot: int) -> None:
+        if self.ref[slot] <= 0:
+            raise RuntimeError(f"double free of page {slot}")
+        self.ref[slot] -= 1
+        if self.ref[slot] == 0:
+            self._prefix_forget(slot)
+            self.free.append(slot)
+
+    def _alloc(self) -> int:
+        slot = self.free.pop()
+        self.ref[slot] = 1
+        return slot
+
+    def reserve(self, seq_id: int, n_tokens: int, prompt=None) -> int:
+        """Claim pages covering ``n_tokens`` worst-case for a new sequence.
+
+        With ``prompt`` (a token sequence), the trie is consulted first and
+        the matched prefix pages are *shared* (increffed) instead of
+        allocated — only the non-shared remainder comes off the free list.
+        Returns the number of prompt tokens already covered by shared pages
+        (``lens[seq_id]`` starts there; the caller prefills the rest).
+        """
         if seq_id in self.tables:
             raise ValueError(f"seq {seq_id} already resident")
-        need = self.pages_for(n_tokens)
+        matched, shared = (0, [])
+        if prompt is not None:
+            matched, shared = self.match_prefix(prompt)
+        need = self.pages_for(n_tokens) - len(shared)
         if need > self.num_free:
             raise RuntimeError(
                 f"page pool exhausted: need {need}, free {self.num_free}")
-        self.tables[seq_id] = [self.free.pop() for _ in range(need)]
-        self.lens[seq_id] = 0
+        for slot in shared:
+            self._incref(slot)
+        self.tables[seq_id] = shared + [self._alloc() for _ in range(need)]
+        self.lens[seq_id] = matched
+        return matched
 
     def release(self, seq_id: int) -> None:
-        """Return a finished/evicted sequence's pages to the free list."""
-        self.free.extend(self.tables.pop(seq_id))
+        """Drop a finished/evicted sequence's page references; slots whose
+        last reference dies return to the free list."""
+        for slot in self.tables.pop(seq_id):
+            self._decref(slot)
         self.lens.pop(seq_id)
+
+    def fork(self, parent_id: int, child_id: int) -> None:
+        """O(1) copy-on-write clone: the child shares every parent page.
+
+        Physical copies happen lazily, page by page, when either sequence
+        first writes a shared page (:meth:`ensure_writable`).
+        """
+        if child_id in self.tables:
+            raise ValueError(f"seq {child_id} already resident")
+        table = self.tables[parent_id]
+        for slot in table:
+            self._incref(slot)
+        self.tables[child_id] = list(table)
+        self.lens[child_id] = self.lens[parent_id]
+
+    def ensure_writable(self, seq_id: int, page_idx: int) -> int:
+        """COW barrier: make ``tables[seq_id][page_idx]`` exclusively owned.
+
+        Exclusive already → just invalidate any trie entry (its content is
+        about to change) and return the slot. Shared → copy the page (all
+        layers, k+v+scales) to a fresh slot, swap it into this table only,
+        and decref the original. Every write path must pass through here so
+        a shared page is never mutated through any block table.
+        """
+        slot = self.tables[seq_id][page_idx]
+        if self.ref[slot] == 1:
+            self._prefix_forget(slot)
+            return slot
+        if not self.free:
+            raise RuntimeError("page pool exhausted during copy-on-write")
+        new = self._alloc()
+        for arrs in (self.k_pages, self.v_pages, self.k_scale, self.v_scale):
+            for layer in range(self.n_layers):
+                if arrs[layer] is not None:
+                    arrs[layer] = arrs[layer].at[new].set(arrs[layer][slot])
+        self.ref[slot] -= 1                    # was > 1: never reaches zero
+        self.tables[seq_id][page_idx] = new
+        return new
+
+    # -- diagnostics -----------------------------------------------------
+    def shared_page_stats(self) -> Dict[str, int]:
+        """Block-table occupancy: logical entries vs distinct physical slots."""
+        entries = sum(len(t) for t in self.tables.values())
+        counts: Dict[int, int] = {}
+        for table in self.tables.values():
+            for slot in table:
+                counts[slot] = counts.get(slot, 0) + 1
+        shared = sum(1 for c in counts.values() if c > 1)
+        return {"table_entries": entries, "distinct_slots": len(counts),
+                "shared_slots": shared}
+
+    def check_invariants(self) -> None:
+        """Allocator soundness (exercised by the property tests): no leaked
+        or double-freed slots, refcounts equal table references, free slots
+        unreferenced, trie entries alive."""
+        assert len(self.free) == len(set(self.free)), "duplicate free slots"
+        counts: Dict[int, int] = {}
+        for table in self.tables.values():
+            for slot in table:
+                counts[slot] = counts.get(slot, 0) + 1
+        for slot in range(self.num_pages):
+            assert self.ref[slot] == counts.get(slot, 0), (
+                f"slot {slot}: ref {self.ref[slot]} != "
+                f"{counts.get(slot, 0)} table refs")
+        assert len(self.free) + len(counts) == self.num_pages, "slot leak"
+        for slot in self.free:
+            assert self.ref[slot] == 0
+        for slot in self._prefix_nodes:
+            assert self.ref[slot] > 0, f"trie references free slot {slot}"
 
     # -- data movement ---------------------------------------------------
     def ingest(self, seq_id: int, layer: int, k_t: jax.Array,
-               v_t: jax.Array) -> None:
-        """Quantize one layer's prefill KV (1, KV, S, hd) into pages."""
+               v_t: jax.Array, start: int = 0) -> None:
+        """Quantize one layer's KV (1, KV, S, hd) into pages [start, start+S).
+
+        ``start`` must be page-aligned (the engine's chunking guarantees it).
+        The written pages must be exclusively owned — shared prefix pages are
+        exactly the tokens the caller skips.
+        """
         ps = self.page_size
-        kv, hd = self.n_kv_heads, self.head_dim
+        if start % ps:
+            raise ValueError(f"ingest start {start} not page-aligned")
         s = k_t.shape[2]
+        p0 = start // ps
         n_pages = self.pages_for(s)
-        if n_pages > len(self.tables[seq_id]):
+        if p0 + n_pages > len(self.tables[seq_id]):
             raise RuntimeError(f"seq {seq_id}: prefill exceeds reservation")
-        pad = n_pages * ps - s
-        width = ((0, 0), (0, 0), (0, pad), (0, 0))
-
-        def to_pages(x):
-            x = jnp.pad(x.astype(jnp.float32), width)[0]       # (KV, Sp, hd)
-            x = x.reshape(kv, n_pages, ps, hd)
-            return jnp.swapaxes(x, 0, 1)                       # (np, KV, ps, hd)
-
-        slots = jnp.asarray(self.tables[seq_id][:n_pages], jnp.int32)
+        table = self.tables[seq_id][p0:p0 + n_pages]
+        for slot in table:
+            if self.ref[slot] > 1:
+                raise RuntimeError(f"ingest would write shared page {slot}")
+        slots = jnp.asarray(table, jnp.int32)
         for pages, scales, x in ((self.k_pages, self.k_scale, k_t),
                                  (self.v_pages, self.v_scale, v_t)):
-            xp = to_pages(x)
+            xp = _chunk_to_pages(x, n_pages, ps)
             if self.quantized:
-                sc = int8_scale(xp, axes=(2, 3))               # (np, KV)
-                xq = quantize_int8(xp, sc[..., None, None])
+                xq, sc = _quantize_page_block(xp)
                 scales[layer] = scales[layer].at[slots].set(sc)
             else:
                 xq = xp.astype(pages[layer].dtype)
             pages[layer] = pages[layer].at[slots].set(xq)
-        self.lens[seq_id] = s
+        self.lens[seq_id] = start + s
 
     def batch_tables(self, seq_ids) -> Tuple[jax.Array, jax.Array]:
         """Padded (B, max_pages) block table + (B,) lengths for a decode."""
@@ -421,8 +714,19 @@ class PagePool:
             k_scale=self.k_scale[layer], v_scale=self.v_scale[layer],
             tables=tables, lengths=lengths)
 
-    def writeback(self, layer: int, cache: PagedDecodeCache) -> None:
-        """Store a decode step's functional updates back into the pool."""
+    def prefill_cache(self, layer: int, seq_id: int, q_start: int,
+                      pages_per_step: int = 1) -> PagedPrefillCache:
+        """One layer's view for one sequence's prefill chunk at ``q_start``."""
+        return PagedPrefillCache(
+            k_pages=self.k_pages[layer], v_pages=self.v_pages[layer],
+            k_scale=self.k_scale[layer], v_scale=self.v_scale[layer],
+            table=jnp.asarray(self.tables[seq_id], jnp.int32),
+            q_start=q_start, pages_per_step=pages_per_step)
+
+    def writeback(self, layer: int, cache) -> None:
+        """Store a decode/prefill step's functional updates back into the
+        pool (:class:`PagedDecodeCache` and :class:`PagedPrefillCache` share
+        the page/scale field names)."""
         self.k_pages[layer] = cache.k_pages
         self.v_pages[layer] = cache.v_pages
         self.k_scale[layer] = cache.k_scale

@@ -1,0 +1,182 @@
+"""PagePool allocator invariants under refcount/COW semantics.
+
+Random reserve / fork / release / ensure_writable / ingest traces must
+never leak a page, never double-free one, and never let a shared page be
+written through any block table. The trace driver is deterministic given a
+seed; when ``hypothesis`` is installed (CI) it also explores adversarial
+traces, and without it the seed sweep still covers thousands of ops.
+"""
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagePool
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KV, HD, PS = 2, 8, 4
+NUM_PAGES = 12
+VOCAB = 5          # tiny alphabet → prompt prefixes collide often
+
+
+def _pool():
+    return PagePool(n_layers=1, n_kv_heads=KV, head_dim=HD,
+                    num_pages=NUM_PAGES, page_size=PS, quantized=True)
+
+
+def _apply_op(pool: PagePool, rng: random.Random, next_id: list,
+              writers: dict) -> None:
+    """One random allocator op; raises only for modeled-invalid requests."""
+    resident = sorted(pool.tables)
+    op = rng.choice(("reserve", "reserve", "fork", "release", "write",
+                     "ingest"))
+    if op == "reserve":
+        n_tokens = rng.randint(1, 3 * PS)
+        prompt = [rng.randrange(VOCAB) for _ in range(n_tokens)]
+        matched, shared = pool.match_prefix(prompt)
+        if pool.pages_for(n_tokens) - len(shared) > pool.num_free:
+            return
+        sid = next_id[0]
+        next_id[0] += 1
+        got = pool.reserve(sid, n_tokens, prompt=prompt)
+        assert got == matched
+        assert pool.lens[sid] == matched
+        if rng.random() < 0.7:     # most sequences publish their prefix
+            pool.register_prefix(sid, prompt)
+    elif op == "fork" and resident:
+        parent = rng.choice(resident)
+        if pool.num_free == 0:
+            return                 # a forked child could deadlock on COW
+        sid = next_id[0]
+        next_id[0] += 1
+        pool.fork(parent, sid)
+        assert pool.tables[sid] == pool.tables[parent]
+    elif op == "release" and resident:
+        sid = rng.choice(resident)
+        pool.release(sid)
+        writers.pop(sid, None)
+    elif op == "write" and resident:
+        sid = rng.choice(resident)
+        idx = rng.randrange(len(pool.tables[sid]))
+        if pool.ref[pool.tables[sid][idx]] > 1 and not pool.free:
+            return                 # COW copy needs a free slot
+        slot = pool.ensure_writable(sid, idx)
+        # the COW barrier's contract: post-write the slot is exclusive
+        assert pool.ref[slot] == 1
+        assert pool.tables[sid][idx] == slot
+        # a slot never accepts writes from two different tables while shared
+        holders = [s for s, t in pool.tables.items() if slot in t]
+        assert holders == [sid]
+        writers.setdefault(slot, set()).add(sid)
+    elif op == "ingest" and resident:
+        sid = rng.choice(resident)
+        n_pages = len(pool.tables[sid])
+        start_page = pool.lens[sid] // PS
+        if start_page >= n_pages:
+            return
+        n_tok = rng.randint(1, (n_pages - start_page) * PS)
+        if any(pool.ref[s] > 1
+               for s in pool.tables[sid][start_page:start_page
+                                         + pool.pages_for(n_tok)]):
+            return                 # modeled-invalid: would write shared pages
+        pool.ingest(sid, 0, jnp.ones((1, KV, n_tok, HD)),
+                    jnp.ones((1, KV, n_tok, HD)), start=start_page * PS)
+
+
+def _run_trace(seed, steps=120):
+    rng = random.Random(seed)
+    pool = _pool()
+    next_id, writers = [0], {}
+    for _ in range(steps):
+        _apply_op(pool, rng, next_id, writers)
+        pool.check_invariants()
+    # draining everything must return the pool to pristine occupancy
+    for sid in list(pool.tables):
+        pool.release(sid)
+    pool.check_invariants()
+    assert pool.num_free == pool.num_pages
+    assert sum(pool.ref) == 0
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_pool_trace_invariants(seed):
+    _run_trace(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.integers(min_value=0, max_value=2**31))
+    def test_pool_trace_invariants_hypothesis(seed):
+        _run_trace(seed)
+
+
+def test_cow_fork_preserves_parent_content():
+    """A divergent write after fork copies the page; the parent's view,
+    content and scales are untouched."""
+    pool = _pool()
+    k = jnp.asarray(np.random.default_rng(0).standard_normal((1, KV, PS, HD)),
+                    jnp.float32)
+    pool.reserve(0, PS)
+    pool.ingest(0, 0, k, k)
+    pool.fork(0, 1)
+    parent_slot = pool.tables[0][0]
+    assert pool.ref[parent_slot] == 2
+    before = np.asarray(pool.k_pages[0][parent_slot])
+    child_slot = pool.ensure_writable(1, 0)
+    assert child_slot != parent_slot
+    assert pool.ref[parent_slot] == 1 and pool.ref[child_slot] == 1
+    # COW copied the page bit-exactly before the (upcoming) divergent write
+    np.testing.assert_array_equal(np.asarray(pool.k_pages[0][child_slot]),
+                                  before)
+    pool.k_pages[0] = pool.k_pages[0].at[child_slot].set(0)
+    np.testing.assert_array_equal(np.asarray(pool.k_pages[0][parent_slot]),
+                                  before)
+    pool.check_invariants()
+    pool.release(0)
+    pool.release(1)
+    assert pool.num_free == pool.num_pages
+
+
+def test_prefix_match_shares_and_release_forgets():
+    """Admission shares registered prefix pages; the trie forgets slots
+    whose last reference dies."""
+    pool = _pool()
+    prompt = [1, 2, 3, 4, 1, 2, 3, 4, 9]           # two full pages + 1 token
+    pool.reserve(0, len(prompt), prompt=prompt)
+    pool.register_prefix(0, prompt)
+    m, slots = pool.match_prefix(prompt)
+    assert m == 2 * PS and slots == pool.tables[0][:2]
+    # a second sequence with the same prompt shares both full pages
+    got = pool.reserve(1, len(prompt) + 4, prompt=prompt)
+    assert got == 2 * PS
+    assert pool.tables[1][:2] == pool.tables[0][:2]
+    assert all(pool.ref[s] == 2 for s in slots)
+    pool.check_invariants()
+    pool.release(0)
+    assert all(pool.ref[s] == 1 for s in slots)    # still held by seq 1
+    m2, _ = pool.match_prefix(prompt)
+    assert m2 == 2 * PS                            # trie entry survives
+    pool.release(1)
+    m3, _ = pool.match_prefix(prompt)
+    assert m3 == 0                                 # last ref died → forgotten
+    assert pool.num_free == pool.num_pages
+    pool.check_invariants()
+
+
+def test_match_prefix_capped_before_last_token():
+    """A fully-matching prompt still leaves ≥1 token to prefill (the caller
+    needs last-position logits to sample)."""
+    pool = _pool()
+    prompt = [1, 2, 3, 4, 5, 6, 7, 0]              # exactly two full pages
+    pool.reserve(0, len(prompt), prompt=prompt)
+    pool.register_prefix(0, prompt)
+    m, slots = pool.match_prefix(prompt)
+    assert m == PS and len(slots) == 1             # capped at (len-1)//ps

@@ -156,6 +156,38 @@ def test_continuous_batching_mixed_trace_matches_solo(model):
     assert eng.pool.num_free == eng.pool.num_pages   # all pages reclaimed
 
 
+def test_prefix_sharing_page_accounting_and_parity(model):
+    """N sequences sharing a P-token prefix hold ~P/page_size shared pages
+    (not N·P/page_size), decode identically to unshared solo runs, and
+    release everything on finish."""
+    cfg, params = model
+    n, prefix_len, tail_len, ps = 4, 32, 8, 8
+    prefix = jax.random.randint(jax.random.PRNGKey(20), (prefix_len,), 0,
+                                cfg.vocab_size)
+    prompts = [jnp.concatenate([
+        prefix, jax.random.randint(jax.random.PRNGKey(21 + i), (tail_len,),
+                                   0, cfg.vocab_size)]) for i in range(n)]
+
+    eng = ContinuousBatchingEngine(params, cfg, kv_dtype="int8", page_size=ps,
+                                   capacity_tokens=8 * 64)
+    sids = [eng.submit(p, 16) for p in prompts]
+    while eng.waiting or eng.prefilling:          # drive until all admitted
+        eng.step()
+    stats = eng.pool.shared_page_stats()
+    shared_pages = prefix_len // ps
+    assert stats["shared_slots"] == shared_pages
+    # n tables reference the prefix chain; (n-1)·P/ps pages were saved
+    assert (stats["table_entries"] - stats["distinct_slots"]
+            == (n - 1) * shared_pages)
+    outs = eng.run()
+    assert eng.pool.num_free == eng.pool.num_pages    # decref'd clean
+    for i, sid in enumerate(sids):
+        solo = ContinuousBatchingEngine(params, cfg, kv_dtype="int8",
+                                        page_size=ps, capacity_tokens=8 * 64)
+        ssid = solo.submit(prompts[i], 16)
+        assert solo.run()[ssid] == outs[sid], f"request {i} diverged"
+
+
 def test_engine_rejects_oversized_request():
     cfg = get_config("qwen2-0.5b", reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
