@@ -14,13 +14,20 @@ Per (cache kind, batch), following benchmarks/common.py:
   actually occupy (block-table gather) plus the one-page requantize
   write-back per appended token.
 
-Two serving-regime sections ride along:
+Three serving-regime sections ride along:
 
 * prefix sharing — N requests with a common P-token prefix admitted
   through the engine's trie: shared physical pages vs the N·P/page_size an
   unshared pool would burn.
 * chunked paged prefill — engine prefill throughput (tokens straight into
   int8 pages, no dense staging slab) and the pages touched.
+* tensor parallel (``--mesh N`` / ``REPRO_BENCH_MESH=N``) — the head-sharded
+  serving stack: per-device HBM cache bytes/step (the paged-int8 stream
+  divided over the model axis) and the estimated collective bytes/token of
+  the two row-parallel all-reduces per layer (f32 wire vs the int8-
+  compressed ``quantized_psum``); measured engine tok/s on a real mesh when
+  the host exposes ≥ N devices (e.g. under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
 Emits ``BENCH_decode.json`` at the repo root so the serving-roofline
 trajectory is recorded run over run. The headline acceptance ratio is
@@ -40,6 +47,7 @@ import numpy as np
 from benchmarks.common import csv_row
 
 _TINY = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+_MESH_TP = int(os.environ.get("REPRO_BENCH_MESH", "0"))
 
 BATCHES = (1, 2) if _TINY else (1, 8, 32)
 PROMPT = 8 if _TINY else 32
@@ -174,7 +182,52 @@ def _chunked_prefill_entry(cfg, params):
     }
 
 
-def rows():
+def _tensor_parallel_entry(cfg, params, tp: int, mean_len: float):
+    """Head-sharded TP serving: per-device cache stream + collective cost."""
+    base = modeled_bytes_step(cfg, 8, "paged-int8", mean_len=mean_len)
+    sharded = cfg.n_kv_heads % tp == 0
+    kv_div = tp if sharded else 1
+    # the two row-parallel all-reduces per layer (wo + w_down) move one
+    # (batch, d_model) partial each: a ring f32 psum puts 2·(tp-1)/tp of
+    # the payload on each device's wire; quantized_psum all-gathers every
+    # peer's FULL int8 partial — (tp-1)·payload per device — and sums
+    # locally, so the compression is 4x at tp=2 and washes out by tp=8
+    payload_f32 = 8 * cfg.d_model * 4
+    payload_int8 = 8 * cfg.d_model * 1 + 4
+    coll_f32 = (cfg.n_layers * 2 * (2 * (tp - 1) / tp)
+                * payload_f32 / 8)                   # per token
+    coll_int8 = cfg.n_layers * 2 * (tp - 1) * payload_int8 / 8
+    entry = {
+        "tp": tp,
+        "kv_heads_sharded": sharded,
+        "modeled_hbm_bytes_step_per_device": base / kv_div,
+        "modeled_collective_bytes_token_f32": coll_f32,
+        "modeled_collective_bytes_token_int8": coll_int8,
+        "measured_tok_s": None,
+    }
+    n_dev = len(jax.devices())
+    if n_dev >= tp and n_dev % tp == 0:   # make_serving_mesh needs tp | n_dev
+        from repro.launch.mesh import make_serving_mesh
+        from repro.launch.serve import shard_params
+        from repro.serving.engine import generate
+        mesh = make_serving_mesh(tp, data=n_dev // tp)
+        resident = shard_params(params, mesh)   # weights resident-sharded,
+        prompt = jax.random.randint(jax.random.PRNGKey(3), (2, PROMPT), 0,
+                                    cfg.vocab_size)
+        call = lambda: generate(resident, cfg, prompt, steps=STEPS,  # noqa: E731
+                                kv_dtype="int8", page_size=PAGE_SIZE,
+                                mesh=mesh)
+        jax.block_until_ready(call())      # warm (compile/trace)
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        entry["measured_tok_s"] = 2 * STEPS / (time.perf_counter() - t0)
+    else:
+        entry["measured_skipped"] = \
+            f"host has {n_dev} device(s), not a multiple of tp={tp}"
+    return entry
+
+
+def rows(mesh_tp: int = _MESH_TP):
     from repro.models import init_params
     cfg = _cfg()
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -219,6 +272,20 @@ def rows():
         f"chunk {pre['chunk_tokens']} tok, "
         f"{pre['pages_per_step']} pages/grid-step, no dense KV slab")
 
+    if mesh_tp > 1:
+        tpe = _tensor_parallel_entry(cfg, params, mesh_tp, mean_len)
+        report["tensor_parallel"] = tpe
+        meas = (f"{tpe['measured_tok_s']:.1f} tok/s"
+                if tpe["measured_tok_s"] else "modeled only")
+        yield csv_row(
+            f"decode_serving/tensor_parallel/tp{mesh_tp}",
+            0.0 if not tpe["measured_tok_s"] else 1e6 / tpe["measured_tok_s"],
+            f"{meas}; {tpe['modeled_hbm_bytes_step_per_device'] / 1e6:.3f} "
+            f"MB/step/device; collectives "
+            f"{tpe['modeled_collective_bytes_token_f32'] / 1e3:.2f} kB/tok "
+            f"f32 -> {tpe['modeled_collective_bytes_token_int8'] / 1e3:.2f} "
+            f"kB/tok int8 wire")
+
     yield f"# paged-int8 / dense-bf16 modeled bytes at b8: {ratio:.3f}"
     if _TINY:
         yield "# tiny smoke mode: skipping BENCH_decode.json write"
@@ -229,5 +296,12 @@ def rows():
 
 
 if __name__ == "__main__":
-    for row in rows():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=_MESH_TP, metavar="TP",
+                    help="model-axis degree for the tensor_parallel section "
+                         "(0 = off; measured when the host has >= TP devices)")
+    args = ap.parse_args()
+    for row in rows(mesh_tp=args.mesh):
         print(row)

@@ -245,6 +245,20 @@ def flush() -> None:
         _save_disk()
 
 
+def has_cached(kind: str, m: int, n: int, k: int, *, fused: bool = False,
+               a_in_bytes: int = 4) -> bool:
+    """Is (kind, fused, m, n, k) already tuned for this backend?
+
+    Lets warmup loops skip shapes a previous process (or an earlier
+    enumeration pass in the same warmup) already paid for, instead of
+    re-tuning — :func:`tune` itself always re-scores.
+    """
+    key = _key(kind, fused, m, n, k, _backend(), a_in_bytes)
+    with _lock:
+        _load_disk()
+        return key in _mem_cache
+
+
 def tune(kind: str, m: int, n: int, k: int, *, fused: bool = False,
          a_in_bytes: int = 4, measure: Optional[bool] = None,
          timer: Optional[Callable] = None,

@@ -20,6 +20,13 @@ never touched because the skip test uses lengths, not the table).
 ``impl='auto'`` follows the repo convention: Pallas on TPU, the XLA
 reference elsewhere. The Pallas path requires int8 pages with scales; float
 pages (used by the bf16 paged pool) route through the reference.
+
+Tensor parallelism: :func:`paged_attention_tp` shard_maps the kernel over a
+mesh's ``model`` axis with every KV-head-carrying operand split by head —
+each device gathers/dequantizes/attends only its local heads of its local
+page shards, so the KV hot path moves **zero** bytes between devices (the
+one collective of a TP decode layer is the row-parallel ``wo`` all-reduce
+that follows).
 """
 from __future__ import annotations
 
@@ -30,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.pltpu_compat import CompilerParams
 
@@ -185,3 +194,36 @@ def paged_attention(q, k_pages, v_pages, k_scale, v_scale, tables, lengths,
             interpret=(not _on_tpu()) if interpret is None else interpret)
     return paged_attention_reference(q, k_pages, v_pages, k_scale, v_scale,
                                      tables, lengths, sm_scale=sm_scale)
+
+
+def paged_attention_tp(q, k_pages, v_pages, k_scale, v_scale, tables,
+                       lengths, *, mesh, axis: str = "model",
+                       sm_scale: Optional[float] = None, impl: str = "auto",
+                       interpret: Optional[bool] = None):
+    """Head-sharded tensor-parallel paged decode attention.
+
+    Same shapes as :func:`paged_attention_reference`; the KV-head dim of
+    ``q`` (dim 1) and of the pages/scales must divide ``mesh.shape[axis]``.
+    Each device runs the single-device kernel over its local heads of its
+    local page shards — block tables and lengths are replicated control
+    state, and no KV byte crosses the interconnect.
+    """
+    kv = q.shape[1]
+    if kv % mesh.shape[axis]:
+        raise ValueError(
+            f"kv heads {kv} not divisible by {axis}={mesh.shape[axis]}")
+    head4 = P(None, axis, None, None)
+    head2 = P(None, axis)
+    none_spec = None if k_scale is None else head2
+
+    def body(q_, kp, vp, ks, vs, tb, ln):
+        return paged_attention(q_, kp, vp, ks, vs, tb, ln,
+                               sm_scale=sm_scale, impl=impl,
+                               interpret=interpret)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(head4, head4, head4, none_spec, none_spec,
+                  P(None, None), P(None)),
+        out_specs=head4, check_rep=False)
+    return fn(q, k_pages, v_pages, k_scale, v_scale, tables, lengths)

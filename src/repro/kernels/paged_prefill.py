@@ -24,6 +24,12 @@ Grid (KV, ceil(n_pages / pages_per_step)), kv-steps innermost ('arbitrary').
 ``impl='auto'`` follows the repo convention: Pallas on TPU, the XLA
 reference elsewhere. The Pallas path requires int8 pages with scales; float
 pages (the bf16 paged pool) route through the reference.
+
+Tensor parallelism: :func:`paged_prefill_attention_tp` shard_maps the kernel
+over a mesh's ``model`` axis by kv head (q's leading dim, the pages' head
+dim) — each device writes and attends only its head shard of the sequence's
+pages; the block table is replicated control state and the KV hot path is
+collective-free.
 """
 from __future__ import annotations
 
@@ -34,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.pltpu_compat import CompilerParams
 
@@ -208,3 +216,37 @@ def paged_prefill_attention(q, k_pages, v_pages, k_scale, v_scale, table, *,
             interpret=(not _on_tpu()) if interpret is None else interpret)
     return paged_prefill_reference(q, k_pages, v_pages, k_scale, v_scale,
                                    table, q_start=q_start, sm_scale=sm_scale)
+
+
+def paged_prefill_attention_tp(q, k_pages, v_pages, k_scale, v_scale, table,
+                               *, mesh, axis: str = "model", q_start: int,
+                               pages_per_step: int = 1,
+                               sm_scale: Optional[float] = None,
+                               impl: str = "auto",
+                               interpret: Optional[bool] = None):
+    """Head-sharded tensor-parallel chunked paged prefill.
+
+    Same shapes as :func:`paged_prefill_reference`; q's kv dim (dim 0) and
+    the pages' head dim must divide ``mesh.shape[axis]``. Each device runs
+    the chunk's causal flash attention over its local heads of its local
+    page shards; the block table is replicated and no KV byte crosses the
+    interconnect.
+    """
+    kv = q.shape[0]
+    if kv % mesh.shape[axis]:
+        raise ValueError(
+            f"kv heads {kv} not divisible by {axis}={mesh.shape[axis]}")
+    qspec = P(axis, None, None, None)
+    head4 = P(None, axis, None, None)
+    sspec = None if k_scale is None else P(None, axis)
+
+    def body(q_, kp, vp, ks, vs, tb):
+        return paged_prefill_attention(
+            q_, kp, vp, ks, vs, tb, q_start=q_start,
+            pages_per_step=pages_per_step, sm_scale=sm_scale, impl=impl,
+            interpret=interpret)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(qspec, head4, head4, sspec, sspec, P(None)),
+                   out_specs=qspec, check_rep=False)
+    return fn(q, k_pages, v_pages, k_scale, v_scale, table)

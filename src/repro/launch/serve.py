@@ -3,6 +3,17 @@
 CPU-scale e2e (runs in this container):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --qmode w8a8 --batch 4 --prompt-len 32 --steps 16
+
+Tensor-parallel serving (8 virtual devices, model axis 4):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --qmode w8a8 --tp 4 --batch 4 --prompt-len 32 --steps 16
+
+With ``--tp``, the weights are resident model-sharded (column-parallel
+q/kv/up/gate, row-parallel wo/down via the serve rule table), the paged KV
+pool is head-sharded, and the engine runs every step under the serve-mode
+mesh context. ``--tp-int8-reduce`` compresses the row-parallel all-reduces
+to int8 on the wire.
 """
 from __future__ import annotations
 
@@ -13,8 +24,38 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.launch.mesh import make_serving_mesh
 from repro.models import init_params, quantize_params
+from repro.parallel.sharding import (effective_model_shards, make_rules,
+                                     params_pspecs)
 from repro.serving.engine import generate
+
+
+def shard_params(params, mesh):
+    """device_put the params tree to its serve-rule shardings.
+
+    QuantizedTensor leaves place their int payload and (1, N) scale
+    separately (column-consistent specs from ``params_pspecs``).
+    """
+    from jax.sharding import NamedSharding
+
+    from repro.core.quant import QuantizedTensor
+
+    rules = make_rules("serve")
+    specs = params_pspecs(params, rules, mesh)
+
+    def put(x, s):
+        if isinstance(x, QuantizedTensor):
+            return QuantizedTensor(
+                q=jax.device_put(x.q, NamedSharding(mesh, s.q)),
+                scale=jax.device_put(x.scale, NamedSharding(mesh, s.scale)),
+                bits=x.bits, shape=x.shape)
+        return jax.device_put(x, NamedSharding(mesh, s))
+
+    return jax.tree_util.tree_map(
+        put, params, specs,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor)
+        or (hasattr(x, "shape") and not isinstance(x, dict)))
 
 
 def main():
@@ -28,6 +69,10 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--sample", default="greedy", choices=["greedy", "temperature"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-axis (tensor-parallel) degree; 1 = off")
+    ap.add_argument("--tp-int8-reduce", action="store_true",
+                    help="int8-compress the row-parallel all-reduces")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced, qmode=args.qmode)
@@ -38,6 +83,14 @@ def main():
         params = quantize_params(params, cfg, args.qmode)
         print(f"[serve] PTQ to {args.qmode} in {time.time()-t0:.2f}s")
 
+    mesh = None
+    if args.tp > 1:
+        mesh = make_serving_mesh(args.tp)
+        params = shard_params(params, mesh)
+        tp_eff = effective_model_shards(mesh, cfg.n_kv_heads)
+        sharded = tp_eff if tp_eff > 1 else "replicated"
+        print(f"[serve] mesh {dict(mesh.shape)}; kv-head sharding: {sharded}")
+
     if cfg.embedding_inputs:
         prompt = jax.random.normal(
             key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16)
@@ -47,7 +100,8 @@ def main():
 
     t0 = time.time()
     toks = generate(params, cfg, prompt, steps=args.steps, key=key,
-                    sample=args.sample)
+                    sample=args.sample, mesh=mesh,
+                    tp_int8_reduce=args.tp_int8_reduce)
     dt = time.time() - t0
     n_new = toks.shape[0] * toks.shape[1]
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "

@@ -18,6 +18,15 @@ KV caching goes through :mod:`repro.serving.kv_cache`:
   attention runs the paged int8 decode kernel
   (:mod:`repro.kernels.paged_attention`), so the quantized cache is never
   materialized as f32 in HBM.
+
+Tensor-parallel serving: under an active ``mode='serve'`` mesh context
+(:func:`repro.parallel.sharding.serve_tp`) with a kv-head count divisible by
+the model axis, the paged branches run the **head-sharded shard_map kernel
+wrappers** (each device attends over its local heads of its local page
+shards; zero KV bytes on the wire) and the output projection runs the
+explicit row-parallel path — one (optionally int8-compressed) all-reduce
+per attention layer. Indivisible head counts (qwen2-0.5b's 14 over
+model=16) degrade gracefully to the replicated single-device path.
 """
 from __future__ import annotations
 
@@ -26,11 +35,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention import paged_attention
-from repro.kernels.paged_prefill import paged_prefill_attention
+from repro.kernels.paged_attention import paged_attention, paged_attention_tp
+from repro.kernels.paged_prefill import (paged_prefill_attention,
+                                         paged_prefill_attention_tp)
 from repro.models.config import ModelConfig
-from repro.models.modules import apply_rope, linear, rms_norm, rope_freqs
-from repro.parallel.sharding import logical
+from repro.models.modules import (apply_rope, linear, rms_norm, rope_freqs,
+                                  row_parallel_linear, tp_shardable)
+from repro.parallel.sharding import (effective_model_shards, logical,
+                                     serve_tp)
 from repro.serving.kv_cache import (DEFAULT_PAGE_SIZE, DenseKVCache,
                                     PagedDecodeCache, PagedPrefillCache)
 
@@ -111,29 +123,49 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     k = logical(k, "batch", "seq", "kv_heads", "head_dim")
     v = logical(v, "batch", "seq", "kv_heads", "head_dim")
 
+    # head-sharded TP applies when every kv shard holds whole head groups
+    mesh, tp = serve_tp()
+    head_tp = mesh is not None and effective_model_shards(mesh, kv) > 1
+
+    def _out_proj(out):
+        if head_tp and tp_shardable(p["wo"], tp):
+            return row_parallel_linear(out, p["wo"], mesh=mesh, qmode=qmode)
+        return linear(out, p["wo"], qmode=qmode)
+
     if isinstance(cache, PagedPrefillCache):
         assert b == 1, "paged prefill runs one sequence's chunk at a time"
         new_cache = cache.write_chunk(jnp.swapaxes(k, 1, 2),
                                       jnp.swapaxes(v, 1, 2))
         qp = jnp.transpose(q.reshape(s, kv, g, hd), (1, 0, 2, 3))
-        ctx = paged_prefill_attention(
-            qp, new_cache.k_pages, new_cache.v_pages, new_cache.k_scale,
-            new_cache.v_scale, new_cache.table, q_start=new_cache.q_start,
-            pages_per_step=new_cache.pages_per_step)
+        if head_tp:
+            ctx = paged_prefill_attention_tp(
+                qp, new_cache.k_pages, new_cache.v_pages, new_cache.k_scale,
+                new_cache.v_scale, new_cache.table, mesh=mesh,
+                q_start=new_cache.q_start,
+                pages_per_step=new_cache.pages_per_step)
+        else:
+            ctx = paged_prefill_attention(
+                qp, new_cache.k_pages, new_cache.v_pages, new_cache.k_scale,
+                new_cache.v_scale, new_cache.table, q_start=new_cache.q_start,
+                pages_per_step=new_cache.pages_per_step)
         out = jnp.transpose(ctx, (1, 0, 2, 3)).reshape(1, s, h * hd)
-        y = linear(out, p["wo"], qmode=qmode)
-        return y, new_cache
+        return _out_proj(out), new_cache
 
     if isinstance(cache, PagedDecodeCache):
         assert s == 1, "paged cache is decode-only (one token per sequence)"
         new_cache = cache.append(jnp.swapaxes(k, 1, 2)[:, :, 0],
                                  jnp.swapaxes(v, 1, 2)[:, :, 0])
-        ctx = paged_attention(q.reshape(b, kv, g, hd), new_cache.k_pages,
-                              new_cache.v_pages, new_cache.k_scale,
-                              new_cache.v_scale, new_cache.tables,
-                              new_cache.lengths)
-        y = linear(ctx.reshape(b, 1, h * hd), p["wo"], qmode=qmode)
-        return y, new_cache
+        if head_tp:
+            ctx = paged_attention_tp(
+                q.reshape(b, kv, g, hd), new_cache.k_pages,
+                new_cache.v_pages, new_cache.k_scale, new_cache.v_scale,
+                new_cache.tables, new_cache.lengths, mesh=mesh)
+        else:
+            ctx = paged_attention(q.reshape(b, kv, g, hd), new_cache.k_pages,
+                                  new_cache.v_pages, new_cache.k_scale,
+                                  new_cache.v_scale, new_cache.tables,
+                                  new_cache.lengths)
+        return _out_proj(ctx.reshape(b, 1, h * hd)), new_cache
 
     new_cache = None
     if cache is None:

@@ -1,15 +1,29 @@
-"""Shared building blocks: norms, rope, linear-with-CAMP, gated MLP."""
+"""Shared building blocks: norms, rope, linear-with-CAMP, gated MLP.
+
+Tensor-parallel serving: :func:`row_parallel_linear` is the explicit
+shard_map call path for the two row-parallel projections of a transformer
+block (attention ``wo``, MLP ``w_down``). Each device runs the fused CAMP
+GEMM on its K-shard of the weight and the matching slice of the activation,
+then the partial outputs are all-reduced — optionally with an int8 payload
+on the wire (:func:`repro.parallel.collectives.quantized_psum`). Under an
+active ``mode='serve'`` mesh context :func:`gated_mlp` and the attention
+output projection route through it automatically when the sharded dim
+divides the model axis; otherwise they fall back to the replicated path.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.camp import camp_matmul, weight_bits
 from repro.core.quant import QuantizedTensor
 from repro.kernels.epilogue import apply_epilogue, parse_epilogue
-from repro.parallel.sharding import logical
+from repro.parallel.collectives import quantized_psum
+from repro.parallel.sharding import active_ctx, logical, serve_tp
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
@@ -71,6 +85,73 @@ def linear(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
     return y
 
 
+def tp_shardable(w, tp: int) -> bool:
+    """Can a (K, N) weight's contraction dim split over ``tp`` shards?
+
+    int4 payloads are packed 2-per-byte along K, so each K-shard must also
+    hold an even number of logical rows.
+    """
+    if tp <= 1:
+        return False
+    k = w.shape[0]
+    if k % tp:
+        return False
+    if isinstance(w, QuantizedTensor) and w.bits == 4:
+        return (k // tp) % 2 == 0
+    return True
+
+
+def _tp_int8_reduce() -> bool:
+    ctx = active_ctx()
+    return bool(ctx is not None and ctx.opts.get("tp_int8_reduce"))
+
+
+def row_parallel_linear(x: jax.Array, w, *, mesh, axis: str = "model",
+                        qmode: str = "none", impl: str = "auto",
+                        quantized_reduce: Optional[bool] = None) -> jax.Array:
+    """Megatron row-parallel projection: ``x @ W`` with W K-sharded.
+
+    ``x``: (..., K) with the last dim carried by ``axis`` (attention heads ×
+    head_dim after head-sharded attention; d_ff after column-parallel
+    gate/up); ``w``: (K, N) row-sharded on the same axis. Each device runs
+    the fused CAMP GEMM (or bf16 matmul) on its local shard — the activation
+    quantization inside the kernel sees only shard-local rows, so no
+    quantized operand is ever gathered — and the f32 partial outputs are
+    all-reduced, int8-compressed on the wire when ``quantized_reduce``
+    (default: the serve context's ``tp_int8_reduce`` opt).
+    """
+    if quantized_reduce is None:
+        quantized_reduce = _tp_int8_reduce()
+    xspec = P(*((None,) * (x.ndim - 1) + (axis,)))
+    yspec = P(*((None,) * x.ndim))
+
+    def reduce(y):
+        y = y.astype(jnp.float32)
+        return quantized_psum(y, axis) if quantized_reduce \
+            else jax.lax.psum(y, axis)
+
+    if isinstance(w, QuantizedTensor):
+        n = w.shape[1]
+        bits = w.bits
+
+        def body(x_l, wq_l, ws_l):
+            w_l = QuantizedTensor(q=wq_l, scale=ws_l, bits=bits,
+                                  shape=(x_l.shape[-1], n))
+            return reduce(linear(x_l, w_l, qmode=qmode, impl=impl))
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(xspec, P(axis, None), P(None, None)),
+                       out_specs=yspec, check_rep=False)
+        return fn(x, w.q, w.scale).astype(x.dtype)
+
+    def body(x_l, w_l):
+        return reduce(jnp.matmul(x_l, w_l.astype(x_l.dtype)))
+
+    fn = shard_map(body, mesh=mesh, in_specs=(xspec, P(axis, None)),
+                   out_specs=yspec, check_rep=False)
+    return fn(x, w).astype(x.dtype)
+
+
 def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
     """positions: (...,) int → (cos, sin) of shape (..., head_dim//2), f32."""
     half = head_dim // 2
@@ -94,11 +175,17 @@ def gated_mlp(x: jax.Array, p: dict, *, qmode: str = "none") -> jax.Array:
 
     Three fused kernel calls, zero standalone elementwise ops: the gate
     projection applies SiLU in its flush, the up projection multiplies by the
-    activated gate in *its* flush, and the down projection is plain.
+    activated gate in *its* flush, and the down projection is plain. Under a
+    serve-mode mesh the gate/up projections are column-parallel (weights
+    d_ff-sharded via the logical rules) and the down projection runs the
+    explicit row-parallel shard_map path — one all-reduce per MLP.
     """
     g = linear(x, p["w_gate"], qmode=qmode, epilogue="silu")
     h = linear(x, p["w_up"], qmode=qmode, epilogue="mul", operand=g)
     h = logical(h, "batch", "seq", "d_ff")
+    mesh, tp = serve_tp()
+    if mesh is not None and tp_shardable(p["w_down"], tp):
+        return row_parallel_linear(h, p["w_down"], mesh=mesh, qmode=qmode)
     return linear(h, p["w_down"], qmode=qmode)
 
 

@@ -163,9 +163,14 @@ def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array, *, qmode: str = "none"):
         xpad, tok_for_slot[:, :e * cap, None], axis=1).reshape(g, e, cap, d)
     xe = logical(xe, "moe_group", "expert", "moe_capacity", "embed")
 
-    # expert GEMMs — the real FLOPs
+    # expert GEMMs — the real FLOPs. Under the serve-mode rule table the
+    # expert_ff dim carries the model axis (tensor-parallel experts: gate/up
+    # column-parallel, down row-parallel with GSPMD placing the all-reduce)
+    # while experts stay expert-parallel over data for training/prefill.
     gate = _expert_matmul(xe, p["experts"]["w_gate"], qmode)
+    gate = logical(gate, "moe_group", "expert", "moe_capacity", "expert_ff")
     up = _expert_matmul(xe, p["experts"]["w_up"], qmode)
+    up = logical(up, "moe_group", "expert", "moe_capacity", "expert_ff")
     h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
     h = logical(h, "moe_group", "expert", "moe_capacity", "expert_ff")
     ye = _expert_matmul(h, p["experts"]["w_down"], qmode)

@@ -26,9 +26,13 @@ _CTX: contextvars.ContextVar[Optional["MeshCtx"]] = contextvars.ContextVar(
 
 
 class MeshCtx:
-    def __init__(self, mesh: Mesh, rules: Mapping[str, Sequence[str]]):
+    def __init__(self, mesh: Mesh, rules: Mapping[str, Sequence[str]],
+                 mode: str = "train",
+                 opts: Optional[Mapping[str, Any]] = None):
         self.mesh = mesh
         self.rules = dict(rules)
+        self.mode = mode
+        self.opts = dict(opts or {})   # e.g. {'tp_int8_reduce': True}
 
     def axis_size(self, name: str) -> int:
         return self.mesh.shape[name]
@@ -39,13 +43,51 @@ def active_ctx() -> Optional[MeshCtx]:
 
 
 @contextlib.contextmanager
-def mesh_context(mesh: Mesh, rules: Mapping[str, Sequence[str]]):
-    tok = _CTX.set(MeshCtx(mesh, rules))
+def mesh_context(mesh: Mesh, rules: Mapping[str, Sequence[str]],
+                 mode: str = "train",
+                 opts: Optional[Mapping[str, Any]] = None):
+    tok = _CTX.set(MeshCtx(mesh, rules, mode, opts))
     try:
         with mesh:           # classic pjit-style mesh context
             yield _CTX.get()
     finally:
         _CTX.reset(tok)
+
+
+def serve_tp() -> tuple:
+    """(mesh, model_axis_size) of an active *serving* mesh context, else
+    (None, 1).
+
+    The serving engine enters ``mesh_context(mesh, rules, mode='serve')``
+    around every forward; model code (attention's paged branches, the
+    row-parallel projections) uses this to decide whether the explicit
+    shard_map tensor-parallel call paths apply. Callers must still check
+    divisibility per tensor — through :func:`effective_model_shards` for
+    the head-sharded paths — so an indivisible head count degrades to the
+    replicated single-device path (the qwen2-0.5b 14-head precedent).
+    """
+    ctx = active_ctx()
+    if ctx is None or ctx.mode != "serve":
+        return None, 1
+    size = dict(ctx.mesh.shape).get("model", 1)
+    if size <= 1:
+        return None, 1
+    return ctx.mesh, size
+
+
+def effective_model_shards(mesh, n_kv_heads: int) -> int:
+    """Sharding degree the head-sharded serving path actually gets.
+
+    The ONE copy of the kv-head divisibility rule: the mesh's model-axis
+    size when it divides ``n_kv_heads``, else 1 (replicated fallback). The
+    engine, the page pool, the attention routing and the serve entrypoint
+    all consult this, so page storage layout and kernel dispatch can never
+    disagree about whether heads are sharded.
+    """
+    if mesh is None:
+        return 1
+    tp = dict(mesh.shape).get("model", 1)
+    return tp if tp > 1 and n_kv_heads % tp == 0 else 1
 
 
 # ---------------------------------------------------------------------------
@@ -66,10 +108,18 @@ def make_rules(mode: str = "train", multi_pod: bool = False,
       shard_map path, not the default.
     * **train for ssm/hybrid**: recurrences must stay shard-local in time, so
       batch carries only data; heads (WKV) / d_inner (Mamba) carry model.
-    * **serve** = classic TP: weights resident model-sharded; the KV cache's
-      *sequence* dim carries the model axis (kv_heads=8 rarely divides 16) —
-      decode attention becomes seq-parallel with partial-softmax collectives;
-      MoE serves expert-parallel over data (weights resident, token a2a).
+    * **prefill/decode** (dense-slab serving) = classic TP: weights resident
+      model-sharded; the KV cache's *sequence* dim carries the model axis
+      (kv_heads=8 rarely divides 16) — decode attention becomes seq-parallel
+      with partial-softmax collectives; MoE serves expert-parallel over data
+      (weights resident, token a2a).
+    * **serve** (paged-pool engine) = head-sharded TP: KV *page storage* and
+      the q/k/v head dims carry the model axis, so paged attention is
+      entirely shard-local (no collective touches the KV hot path) and the
+      row-parallel wo / w_down outputs are the only all-reduces per layer.
+      ``seq_kv`` stays unsharded — pages are never split along tokens — and
+      indivisible head counts fall back to replicated attention via the
+      divisibility check, mirroring the qwen2-0.5b precedent.
     * multi-pod: the pod axis joins the batch for serving; for training it
       carries the activation-stash sequence dim (cheap 2-way).
     """
@@ -112,6 +162,22 @@ def make_rules(mode: str = "train", multi_pod: bool = False,
             "expert_ff": ("model",),
             "moe_group": (),           # serve tokens stay batch-sharded
             "seq_kv": ("model",),
+        }
+    if mode == "serve":
+        return {
+            **weights,
+            "batch": data,
+            "batch_out": data,
+            "seq_act": (),
+            "seq": (),
+            "heads": ("model",),
+            "kv_heads": ("model",),    # page storage shards by kv head
+            "kv_pages": (),            # the page (slot) dim never splits
+            "ssm_inner": ("model",),
+            "expert": data,
+            "expert_ff": ("model",),
+            "moe_group": (),
+            "seq_kv": (),              # pages are head-sharded, not seq-split
         }
     raise ValueError(f"unknown mode {mode!r}")
 

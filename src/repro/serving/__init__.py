@@ -6,7 +6,32 @@ refcounted pages (:class:`~repro.serving.kv_cache.PagedPrefillCache`, no
 dense staging slab), ragged decode appends to them
 (:class:`~repro.serving.kv_cache.PagedDecodeCache`), prompts sharing a
 prefix share physical pages through a trie, and all writes cross a
-copy-on-write barrier.
+copy-on-write barrier. Released prefix pages park in a bounded LRU (trie
+entry intact) so re-submitted prompts re-share them; eviction is LRU-first
+under pool pressure.
+
+Serving parallelism
+-------------------
+With a device mesh (``ContinuousBatchingEngine(mesh=...)``, rules from
+``make_rules('serve')``), the stack is tensor-parallel over the mesh's
+``model`` axis. What is **sharded**:
+
+* KV page *storage* — each device holds ``n_kv_heads / model_shards`` heads
+  of every page, with per-page scales alongside; ingest/append/write_chunk
+  quantize shard-locally and the shard_map attention kernels
+  (``paged_attention_tp`` / ``paged_prefill_attention_tp``) read pages
+  without any cross-device traffic.
+* GEMM operands — q/kv/gate/up weights column-parallel, wo/w_down
+  row-parallel (the serve-mode logical rule table); the row-parallel
+  partial outputs are the layer's only all-reduces, optionally
+  int8-compressed on the wire (``tp_int8_reduce``).
+
+What stays **replicated**: block tables, refcounts, the prefix trie, the
+retained-page LRU, queues and every other scheduler decision — plain host
+code, identical with and without a mesh, which is what keeps sharded and
+single-device page accounting bit-for-bit equal. Head counts the model
+axis does not divide degrade to replicated attention (engine ``tp == 1``)
+with unchanged results.
 
 Engine symbols are re-exported lazily (PEP 562): ``repro.models.attention``
 imports :mod:`repro.serving.kv_cache` at module scope, and an eager

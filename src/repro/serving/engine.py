@@ -27,10 +27,17 @@ Two serving modes:
 * the dense-slab path (``build_prefill_step`` / ``build_decode_step``) —
   the degenerate single-block-table case, kept for hybrid/recurrent mixers
   (SSM/RWKV carry non-KV state) and for the multi-pod dry-run cells.
+
+Both engine modes are **mesh-native**: pass ``mesh=`` and every forward
+runs under the serve-mode sharding rules — KV pages head-sharded over the
+model axis, shard_map attention kernels, row-parallel output projections
+with (optionally int8-compressed) all-reduces — while the scheduler itself
+remains ordinary replicated host code.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -40,7 +47,10 @@ import numpy as np
 
 from repro.core import autotune
 from repro.models.config import ModelConfig
+from repro.models.moe import expert_capacity, routing_group_size
 from repro.models.transformer import forward, init_caches
+from repro.parallel.sharding import (effective_model_shards, make_rules,
+                                     mesh_context)
 from repro.serving import kv_cache as kvc
 
 
@@ -57,7 +67,7 @@ _QMODE_KIND = {"w8a8": "i8", "w4a8": "w4", "w4a4": "a4w4"}
 
 
 def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
-                       prefill_len: int = 0, measure=None):
+                       prefill_len: int = 0, measure=None, tp: int = 1):
     """Pre-tune CAMP GEMM blocks for the transformer's serving linears.
 
     Decode runs one token per sequence (M = batch) and prefill runs
@@ -70,34 +80,55 @@ def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
     Mixer-specific extras (SSM/RWKV projections) still cold-tune on first
     sight.
 
+    ``tp > 1`` warms the tensor-parallel shard shapes instead: column-
+    parallel projections run (m, n/tp, k) per device and the row-parallel
+    wo/w_down run (m, n, k/tp) — the shapes the shard_map call paths
+    actually launch. The enumeration is a set and shapes already present in
+    the persistent cache are skipped, so serve-mode warming (which visits
+    both the sharded and the replicated-fallback shapes across engine
+    restarts) never tunes the same (M, N, K) twice.
+
     Returns [((m, n, k), (bm, bn, bk)), ...] for logging.
     """
-    from repro.models.moe import expert_capacity, routing_group_size
-
     kind = _QMODE_KIND.get(cfg.qmode)
     if kind is None:  # 'none' / weight-only: bf16 matmul, nothing to tune
         return []
     a_in_bytes = jnp.dtype(cfg.dtype).itemsize  # must match the request path
     d, hd = cfg.d_model, cfg.hd
+
+    def shard(k, n, *, row_parallel):
+        """Local (K, N) of one device's GEMM under tp-way model sharding."""
+        if tp <= 1:
+            return (k, n)
+        if row_parallel:
+            return (k // tp, n) if k % tp == 0 else (k, n)
+        return (k, n // tp) if n % tp == 0 else (k, n)
+
     proj = {
-        (d, hd * cfg.n_heads), (d, hd * cfg.n_kv_heads),   # q / kv proj
-        (hd * cfg.n_heads, d),                             # attn out
-        (d, cfg.d_ff), (cfg.d_ff, d),                      # mlp up/gate/down
+        shard(d, hd * cfg.n_heads, row_parallel=False),    # q proj
+        shard(d, hd * cfg.n_kv_heads, row_parallel=False),  # kv proj
+        shard(hd * cfg.n_heads, d, row_parallel=True),     # attn out
+        shard(d, cfg.d_ff, row_parallel=False),            # mlp up/gate
+        shard(cfg.d_ff, d, row_parallel=True),             # mlp down
     }
     if not cfg.tie_embeddings:
-        proj.add((d, cfg.vocab_size))                      # quantized lm head
+        proj.add(shard(d, cfg.vocab_size, row_parallel=False))  # lm head
     ms = sorted({b * max(prefill_len, 1) for b in batch_sizes} |
                 set(batch_sizes))
     shapes = {(m, n, k) for m in ms for (k, n) in proj}
     if cfg.moe_experts:
         # expert GEMMs run at M = groups × capacity, not M = tokens
-        eproj = ((d, cfg.expert_ff), (cfg.expert_ff, d))   # up/gate | down
+        eproj = (shard(d, cfg.expert_ff, row_parallel=False),
+                 shard(cfg.expert_ff, d, row_parallel=True))
         for m in ms:
             sg = routing_group_size(m)
             em = (m // sg) * expert_capacity(sg, cfg)
             shapes |= {(max(em, 1), n, k) for (k, n) in eproj}
     out = []
     for (m, n, k) in sorted(shapes):
+        if autotune.has_cached(kind, m, n, k, fused=True,
+                               a_in_bytes=a_in_bytes):
+            continue           # a previous warmup already paid for this one
         blk = autotune.tune(kind, m, n, k, fused=True,
                             a_in_bytes=a_in_bytes, measure=measure,
                             save=False)
@@ -194,6 +225,17 @@ class ContinuousBatchingEngine:
     depend only on the engine's static chunk size, and sampling keys are
     derived per (seq_id, token index) — a sequence decodes identically
     whether it runs alone or inside a changing batch.
+
+    **Tensor parallelism.** With ``mesh=`` (a (data, model) device mesh),
+    every forward runs inside a ``mode='serve'`` mesh context: the pool's
+    page storage is head-sharded over the model axis, the paged kernels run
+    their shard_map wrappers (KV hot path collective-free), and the
+    row-parallel wo/w_down projections all-reduce their partial outputs —
+    int8-compressed on the wire when ``tp_int8_reduce``. Scheduler state
+    (queues, block tables, trie, refcounts) stays replicated host-side, so
+    admission/retirement logic is identical with and without a mesh; a
+    kv-head count indivisible by the model axis degrades to replicated
+    attention and the engine behaves exactly as on a single device.
     """
 
     def __init__(self, params, cfg: ModelConfig, *,
@@ -203,7 +245,9 @@ class ContinuousBatchingEngine:
                  prefill_chunk: Optional[int] = None,
                  pages_per_step: Optional[int] = None,
                  sample: str = "greedy", temperature: float = 1.0,
-                 key: Optional[jax.Array] = None):
+                 key: Optional[jax.Array] = None,
+                 mesh=None, rules=None, tp_int8_reduce: bool = False,
+                 retain_pages: Optional[int] = None):
         mixers = {cfg.mixer_of(i) for i in range(cfg.n_layers)}
         if mixers != {"attn"}:
             raise ValueError(
@@ -212,6 +256,13 @@ class ContinuousBatchingEngine:
         self.params, self.cfg = params, cfg
         self.sample, self.temperature = sample, temperature
         self.key = jax.random.PRNGKey(0) if key is None else key
+        self.mesh = mesh
+        self.rules = rules if rules is not None else (
+            make_rules("serve") if mesh is not None else None)
+        self.tp_int8_reduce = tp_int8_reduce
+        # sharding degree the pool/kernels actually get (replicated fallback
+        # for head counts the model axis doesn't divide)
+        self.tp = effective_model_shards(mesh, cfg.n_kv_heads)
         # page size / prefill chunking come from the persistent autotune
         # cache (analytic v5e model off-TPU) unless pinned by the caller
         mean_len = max(cfg.max_seq_len // 2, 128)
@@ -228,12 +279,20 @@ class ContinuousBatchingEngine:
         self.pool = kvc.PagePool(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
             num_pages=-(-capacity_tokens // ps), page_size=ps,
-            quantized=(kv_dtype == "int8"), dtype=jnp.dtype(cfg.dtype))
+            quantized=(kv_dtype == "int8"), dtype=jnp.dtype(cfg.dtype),
+            mesh=mesh if self.tp > 1 else None, retain_pages=retain_pages)
         self.waiting: collections.deque = collections.deque()
         self.prefilling: collections.deque = collections.deque()
         self.active: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._next_id = 0
+
+    def _mesh_scope(self):
+        """Serve-mode mesh context for one engine step (no-op without mesh)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return mesh_context(self.mesh, self.rules, mode="serve",
+                            opts={"tp_int8_reduce": self.tp_int8_reduce})
 
     # -- request lifecycle ----------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> int:
@@ -386,10 +445,11 @@ class ContinuousBatchingEngine:
         both stay bounded regardless of prompt length.
         """
         self._admit()
-        if self.prefilling:
-            self._prefill_step()
-        if self.active:
-            self._decode()
+        with self._mesh_scope():
+            if self.prefilling:
+                self._prefill_step()
+            if self.active:
+                self._decode()
         return bool(self.active or self.waiting or self.prefilling)
 
     def run(self) -> Dict[int, List[int]]:
@@ -424,12 +484,15 @@ def _generate_dense(params, cfg: ModelConfig, prompt: jax.Array, *,
 def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
              key=None, sample: str = "greedy", temperature: float = 1.0,
              max_len: Optional[int] = None, kv_dtype: Optional[str] = None,
-             page_size: Optional[int] = None):
+             page_size: Optional[int] = None, mesh=None,
+             tp_int8_reduce: bool = False,
+             retain_pages: Optional[int] = None):
     """Batched generation: prompt (B, S) → (B, steps) new tokens.
 
     All-attention models run on the continuous-batching engine (paged pool;
     pages are int8 when ``kv_dtype='int8'``, else the model dtype). Models
-    with SSM/RWKV mixers fall back to the dense-slab loop.
+    with SSM/RWKV mixers fall back to the dense-slab loop. ``mesh`` turns on
+    tensor-parallel serving (see :class:`ContinuousBatchingEngine`).
     """
     b, s = prompt.shape[:2]
     if (cfg.embedding_inputs
@@ -441,7 +504,8 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
     eng = ContinuousBatchingEngine(
         params, cfg, kv_dtype=kv_dtype, page_size=ps,
         capacity_tokens=b * kvc.round_up(s + steps, ps),
-        sample=sample, temperature=temperature, key=key)
+        sample=sample, temperature=temperature, key=key,
+        mesh=mesh, tp_int8_reduce=tp_int8_reduce, retain_pages=retain_pages)
     sids = [eng.submit(prompt[i], steps) for i in range(b)]
     outs = eng.run()
     return jnp.asarray([outs[sid] for sid in sids], jnp.int32)

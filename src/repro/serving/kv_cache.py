@@ -23,7 +23,16 @@ share a prefix share the physical pages holding it (a trie keyed by
 page-sized token chunks maps prompt prefixes to page chains), and
 :meth:`PagePool.fork` clones a sequence in O(1) by increffing its table.
 Writes go through :meth:`PagePool.ensure_writable`, which copies a page only
-on the first divergent write (copy-on-write).
+on the first divergent write (copy-on-write). Trie-indexed prefix pages
+whose last reference dies are *retained* in a bounded LRU (evicted under
+pool pressure) so a re-submitted prompt re-shares them instead of
+re-prefilling.
+
+Under tensor-parallel serving the pool's page storage is **head-sharded**
+over a mesh's ``model`` axis (``PagePool(mesh=...)``): each device holds its
+``n_kv_heads / model_shards`` heads of every page, per-page scales shard
+alongside, and all allocator/trie/block-table state stays replicated
+host-side control metadata.
 
 Cache types:
 
@@ -50,12 +59,16 @@ All int8 conversion in the repo funnels through :func:`quantize_int8` /
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import effective_model_shards
 
 INT8_AMAX = 127.0
 SCALE_EPS = 1e-8          # floor so all-zero pages dequantize to exact zeros
@@ -434,14 +447,31 @@ class PagePool:
     :meth:`fork` clones a whole sequence by increffing its table. Shared
     pages are immutable through any table: all writers must go through
     :meth:`ensure_writable`, which copies the page to a fresh slot on the
-    first divergent write (COW) and drops stale trie entries. A slot
-    returns to the free list — and falls out of the trie — only when its
-    last reference dies.
+    first divergent write (COW) and drops stale trie entries.
+
+    **Retention.** When a trie-indexed prefix page's last reference dies it
+    is *retained* — parked in a bounded LRU (``retain_pages`` slots, default
+    the whole pool) with its trie entry intact — instead of freed, so a
+    re-submitted prompt re-shares the pages its predecessor wrote. Retained
+    slots still count as reclaimable (:attr:`num_free` includes them):
+    allocation evicts LRU-first under pool pressure, and eviction is what
+    finally drops the trie entry. Slots with no trie entry free immediately,
+    as before.
+
+    **Mesh sharding.** With ``mesh=`` (and a ``model`` axis that divides
+    ``n_kv_heads``), page and scale *storage* is laid out head-sharded over
+    the model axis — each device holds ``n_kv_heads / model`` heads of every
+    page — while all control state (free list, refcounts, block tables,
+    trie) stays replicated host-side. Per-page scales are per (page, head),
+    so quantization during ingest/append/write_chunk is shard-local and the
+    int8 pages are never gathered in HBM; the head-sharded shard_map
+    attention kernels consume the storage exactly as laid out.
     """
 
     def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
                  num_pages: int, page_size: int = DEFAULT_PAGE_SIZE,
-                 quantized: bool = True, dtype=jnp.bfloat16):
+                 quantized: bool = True, dtype=jnp.bfloat16,
+                 mesh=None, retain_pages: Optional[int] = None):
         self.n_layers = n_layers
         self.n_kv_heads = n_kv_heads
         self.head_dim = head_dim
@@ -449,20 +479,32 @@ class PagePool:
         self.page_size = page_size
         self.quantized = quantized
         self.dtype = dtype
+        self.mesh = None
+        self._page_sharding = None
+        self._scale_sharding = None
+        if effective_model_shards(mesh, n_kv_heads) > 1:
+            self.mesh = mesh
+            self._page_sharding = NamedSharding(
+                mesh, P(None, "model", None, None))
+            self._scale_sharding = NamedSharding(mesh, P(None, "model"))
         shape = (num_pages, n_kv_heads, page_size, head_dim)
         page_dtype = jnp.int8 if quantized else dtype
-        self.k_pages: List[jax.Array] = [jnp.zeros(shape, page_dtype)
-                                         for _ in range(n_layers)]
-        self.v_pages: List[jax.Array] = [jnp.zeros(shape, page_dtype)
-                                         for _ in range(n_layers)]
+
+        def pages():
+            return self._pin(jnp.zeros(shape, page_dtype),
+                             self._page_sharding)
+
+        def scales():
+            return self._pin(jnp.full((num_pages, n_kv_heads), SCALE_EPS,
+                                      jnp.float32), self._scale_sharding)
+
+        self.k_pages: List[jax.Array] = [pages() for _ in range(n_layers)]
+        self.v_pages: List[jax.Array] = [pages() for _ in range(n_layers)]
         if quantized:
-            sshape = (num_pages, n_kv_heads)
             self.k_scale: List[Optional[jax.Array]] = [
-                jnp.full(sshape, SCALE_EPS, jnp.float32)
-                for _ in range(n_layers)]
+                scales() for _ in range(n_layers)]
             self.v_scale: List[Optional[jax.Array]] = [
-                jnp.full(sshape, SCALE_EPS, jnp.float32)
-                for _ in range(n_layers)]
+                scales() for _ in range(n_layers)]
         else:
             self.k_scale = [None] * n_layers
             self.v_scale = [None] * n_layers
@@ -470,21 +512,47 @@ class PagePool:
         self.ref: List[int] = [0] * num_pages
         self.tables: Dict[int, List[int]] = {}
         self.lens: Dict[int, int] = {}
+        self.retain_pages = num_pages if retain_pages is None else retain_pages
+        self._retained: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()          # LRU: oldest first
         self._prefix_root = _PrefixNode(-1)
         self._prefix_nodes: Dict[int, Tuple[_PrefixNode, Tuple[int, ...]]] = {}
+
+    @staticmethod
+    def _pin(x: Optional[jax.Array], sharding) -> Optional[jax.Array]:
+        if x is None or sharding is None:
+            return x
+        return jax.device_put(x, sharding)
+
+    @property
+    def sharded(self) -> bool:
+        """Page storage laid out head-sharded over a mesh's model axis?"""
+        return self._page_sharding is not None
 
     # -- accounting ------------------------------------------------------
     @property
     def num_free(self) -> int:
-        return len(self.free)
+        """Reclaimable slots: truly free plus retained (evictable) ones."""
+        return len(self.free) + len(self._retained)
+
+    @property
+    def num_retained(self) -> int:
+        return len(self._retained)
 
     def pages_for(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.page_size))
 
     def can_reserve(self, n_tokens: int, prompt=None) -> bool:
-        """Would :meth:`reserve` succeed? (the one copy of the fit formula)"""
+        """Would :meth:`reserve` succeed? (the one copy of the fit formula)
+
+        Shared prefix pages that are currently *retained* (ref 0) are about
+        to be revived out of the reclaimable set, so they can't double-count
+        as both shared and free.
+        """
         shared = self.match_prefix(prompt)[1] if prompt is not None else []
-        return self.pages_for(n_tokens) - len(shared) <= self.num_free
+        revived = sum(1 for s in shared if self.ref[s] == 0)
+        return (self.pages_for(n_tokens) - len(shared)
+                <= self.num_free - revived)
 
     def page_bytes(self) -> int:
         """HBM bytes one page slot occupies across all layers (k + v)."""
@@ -553,15 +621,41 @@ class PagePool:
             raise RuntimeError(f"incref of free page {slot}")
         self.ref[slot] += 1
 
+    def _share(self, slot: int) -> None:
+        """Take a reference on a trie-matched slot, reviving it out of the
+        retained LRU if its last table reference already died."""
+        if self.ref[slot] == 0:
+            if slot not in self._retained:
+                raise RuntimeError(f"sharing non-retained free page {slot}")
+            del self._retained[slot]
+            self.ref[slot] = 1
+        else:
+            self.ref[slot] += 1
+
     def _decref(self, slot: int) -> None:
         if self.ref[slot] <= 0:
             raise RuntimeError(f"double free of page {slot}")
         self.ref[slot] -= 1
         if self.ref[slot] == 0:
-            self._prefix_forget(slot)
-            self.free.append(slot)
+            if slot in self._prefix_nodes and self.retain_pages > 0:
+                # park in the LRU with the trie entry intact: a re-submitted
+                # prompt re-shares this page instead of re-prefilling it
+                self._retained[slot] = None
+                while len(self._retained) > self.retain_pages:
+                    self._evict_retained()
+            else:
+                self._prefix_forget(slot)
+                self.free.append(slot)
+
+    def _evict_retained(self) -> None:
+        """Evict the least-recently-retained prefix page to the free list."""
+        slot, _ = self._retained.popitem(last=False)
+        self._prefix_forget(slot)
+        self.free.append(slot)
 
     def _alloc(self) -> int:
+        if not self.free:
+            self._evict_retained()     # LRU-first under pool pressure
         slot = self.free.pop()
         self.ref[slot] = 1
         return slot
@@ -570,29 +664,34 @@ class PagePool:
         """Claim pages covering ``n_tokens`` worst-case for a new sequence.
 
         With ``prompt`` (a token sequence), the trie is consulted first and
-        the matched prefix pages are *shared* (increffed) instead of
-        allocated — only the non-shared remainder comes off the free list.
-        Returns the number of prompt tokens already covered by shared pages
-        (``lens[seq_id]`` starts there; the caller prefills the rest).
+        the matched prefix pages are *shared* (increffed — reviving retained
+        pages) instead of allocated — only the non-shared remainder comes
+        off the free list. Returns the number of prompt tokens already
+        covered by shared pages (``lens[seq_id]`` starts there; the caller
+        prefills the rest).
         """
         if seq_id in self.tables:
             raise ValueError(f"seq {seq_id} already resident")
         matched, shared = (0, [])
         if prompt is not None:
             matched, shared = self.match_prefix(prompt)
+        # revive/incref the shared chain first so eviction can't claim it
+        for slot in shared:
+            self._share(slot)
         need = self.pages_for(n_tokens) - len(shared)
         if need > self.num_free:
+            for slot in shared:
+                self._decref(slot)     # rollback (back to retained/trie)
             raise RuntimeError(
                 f"page pool exhausted: need {need}, free {self.num_free}")
-        for slot in shared:
-            self._incref(slot)
         self.tables[seq_id] = shared + [self._alloc() for _ in range(need)]
         self.lens[seq_id] = matched
         return matched
 
     def release(self, seq_id: int) -> None:
         """Drop a finished/evicted sequence's page references; slots whose
-        last reference dies return to the free list."""
+        last reference dies return to the free list — except trie-indexed
+        prefix pages, which park in the retained LRU for future sharing."""
         for slot in self.tables.pop(seq_id):
             self._decref(slot)
         self.lens.pop(seq_id)
@@ -624,7 +723,7 @@ class PagePool:
         if self.ref[slot] == 1:
             self._prefix_forget(slot)
             return slot
-        if not self.free:
+        if not self.free and not self._retained:
             raise RuntimeError("page pool exhausted during copy-on-write")
         new = self._alloc()
         for arrs in (self.k_pages, self.v_pages, self.k_scale, self.v_scale):
@@ -650,7 +749,8 @@ class PagePool:
     def check_invariants(self) -> None:
         """Allocator soundness (exercised by the property tests): no leaked
         or double-freed slots, refcounts equal table references, free slots
-        unreferenced, trie entries alive."""
+        unreferenced, retained slots unreferenced-but-indexed, trie entries
+        alive or retained."""
         assert len(self.free) == len(set(self.free)), "duplicate free slots"
         counts: Dict[int, int] = {}
         for table in self.tables.values():
@@ -660,11 +760,20 @@ class PagePool:
             assert self.ref[slot] == counts.get(slot, 0), (
                 f"slot {slot}: ref {self.ref[slot]} != "
                 f"{counts.get(slot, 0)} table refs")
-        assert len(self.free) + len(counts) == self.num_pages, "slot leak"
+        assert (len(self.free) + len(self._retained) + len(counts)
+                == self.num_pages), "slot leak"
+        assert len(self._retained) <= self.retain_pages or \
+            self.retain_pages == 0, "retained LRU over capacity"
         for slot in self.free:
             assert self.ref[slot] == 0
+            assert slot not in self._retained, f"slot {slot} free+retained"
+        for slot in self._retained:
+            assert self.ref[slot] == 0, f"retained slot {slot} referenced"
+            assert slot in self._prefix_nodes, \
+                f"retained slot {slot} not in trie"
         for slot in self._prefix_nodes:
-            assert self.ref[slot] > 0, f"trie references free slot {slot}"
+            assert self.ref[slot] > 0 or slot in self._retained, \
+                f"trie references free slot {slot}"
 
     # -- data movement ---------------------------------------------------
     def ingest(self, seq_id: int, layer: int, k_t: jax.Array,
@@ -726,8 +835,9 @@ class PagePool:
     def writeback(self, layer: int, cache) -> None:
         """Store a decode/prefill step's functional updates back into the
         pool (:class:`PagedDecodeCache` and :class:`PagedPrefillCache` share
-        the page/scale field names)."""
-        self.k_pages[layer] = cache.k_pages
-        self.v_pages[layer] = cache.v_pages
-        self.k_scale[layer] = cache.k_scale
-        self.v_scale[layer] = cache.v_scale
+        the page/scale field names). Sharded pools re-pin the arrays to the
+        head-sharded layout in case an op's output sharding drifted."""
+        self.k_pages[layer] = self._pin(cache.k_pages, self._page_sharding)
+        self.v_pages[layer] = self._pin(cache.v_pages, self._page_sharding)
+        self.k_scale[layer] = self._pin(cache.k_scale, self._scale_sharding)
+        self.v_scale[layer] = self._pin(cache.v_scale, self._scale_sharding)

@@ -75,17 +75,16 @@ _ELASTIC = textwrap.dedent("""
     sys.path.insert(0, {src!r})
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_test_mesh
     from repro.train import checkpoint as ckpt
 
     state = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-    mesh_a = jax.make_mesh((2, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = make_test_mesh((2, 2))
     sharded = jax.device_put(state["w"], NamedSharding(mesh_a, P("data", "model")))
     ckpt.save({out!r}, {{"w": sharded}}, 1)
 
     # elastic: restore onto a DIFFERENT mesh shape (4x2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = make_test_mesh((4, 2))
     tgt = NamedSharding(mesh_b, P("data", "model"))
     back = ckpt.restore({out!r}, {{"w": sharded}}, shardings={{"w": tgt}})
     assert back["w"].sharding == tgt, back["w"].sharding

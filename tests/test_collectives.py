@@ -11,11 +11,11 @@ _SCRIPT = textwrap.dedent("""
     import sys
     sys.path.insert(0, {src!r})
     import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_test_mesh
     from repro.parallel.collectives import (int8_allreduce_mean,
                                             ring_collective_matmul)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_test_mesh((2, 4))
     rng = np.random.default_rng(0)
 
     # ring collective matmul == plain matmul

@@ -117,8 +117,8 @@ _SPMD = textwrap.dedent("""
     ref_state, ref_metrics = jax.jit(step)(state, data)
     ref_loss = float(ref_metrics["loss"])
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((4, 2))
     rules = make_rules("train", family="dense")
     state2 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
     with mesh_context(mesh, rules):

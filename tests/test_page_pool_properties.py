@@ -41,7 +41,7 @@ def _apply_op(pool: PagePool, rng: random.Random, next_id: list,
         n_tokens = rng.randint(1, 3 * PS)
         prompt = [rng.randrange(VOCAB) for _ in range(n_tokens)]
         matched, shared = pool.match_prefix(prompt)
-        if pool.pages_for(n_tokens) - len(shared) > pool.num_free:
+        if not pool.can_reserve(n_tokens, prompt=prompt):
             return
         sid = next_id[0]
         next_id[0] += 1
@@ -145,9 +145,10 @@ def test_cow_fork_preserves_parent_content():
     assert pool.num_free == pool.num_pages
 
 
-def test_prefix_match_shares_and_release_forgets():
-    """Admission shares registered prefix pages; the trie forgets slots
-    whose last reference dies."""
+def test_prefix_match_shares_and_release_retains():
+    """Admission shares registered prefix pages; slots whose last reference
+    dies are *retained* (trie intact) and revive on the next same-prefix
+    reserve instead of re-prefilling."""
     pool = _pool()
     prompt = [1, 2, 3, 4, 1, 2, 3, 4, 9]           # two full pages + 1 token
     pool.reserve(0, len(prompt), prompt=prompt)
@@ -165,9 +166,55 @@ def test_prefix_match_shares_and_release_forgets():
     m2, _ = pool.match_prefix(prompt)
     assert m2 == 2 * PS                            # trie entry survives
     pool.release(1)
-    m3, _ = pool.match_prefix(prompt)
-    assert m3 == 0                                 # last ref died → forgotten
-    assert pool.num_free == pool.num_pages
+    m3, got3 = pool.match_prefix(prompt)
+    assert m3 == 2 * PS and got3 == slots          # retained, not forgotten
+    assert pool.num_retained == 2
+    assert pool.num_free == pool.num_pages         # still fully reclaimable
+    pool.check_invariants()
+    # a re-submitted prompt revives the retained chain — same physical slots
+    got = pool.reserve(2, len(prompt), prompt=prompt)
+    assert got == 2 * PS and pool.tables[2][:2] == slots
+    assert pool.num_retained == 0
+    pool.release(2)
+    pool.check_invariants()
+
+
+def test_retention_disabled_frees_on_zero():
+    """retain_pages=0 restores the PR-3 free-on-zero semantics."""
+    pool = PagePool(n_layers=1, n_kv_heads=KV, head_dim=HD,
+                    num_pages=NUM_PAGES, page_size=PS, quantized=True,
+                    retain_pages=0)
+    prompt = [1, 2, 3, 4, 9]
+    pool.reserve(0, len(prompt), prompt=prompt)
+    pool.register_prefix(0, prompt)
+    pool.release(0)
+    assert pool.match_prefix(prompt)[0] == 0       # forgotten immediately
+    assert pool.num_retained == 0
+    pool.check_invariants()
+
+
+def test_retention_evicts_lru_under_pressure():
+    """Retained pages are reclaimed LRU-first when the free list runs dry."""
+    pool = _pool()
+    # two released single-page prefixes, retained in submission order
+    for sid, tok in enumerate((1, 2)):
+        prompt = [tok] * PS + [9]                  # one full page + 1 token
+        pool.reserve(sid, len(prompt), prompt=prompt)
+        pool.register_prefix(sid, prompt)
+    old_slot = pool.tables[0][0]
+    new_slot = pool.tables[1][0]
+    pool.release(0)
+    pool.release(1)
+    assert pool.num_retained == 2
+    # exhaust the free list; the next alloc must evict seq 0's page first
+    n_live = len(pool.free)
+    pool.reserve(10, n_live * PS)
+    assert not pool.free and pool.num_retained == 2
+    pool.reserve(11, PS)                           # forces one LRU eviction
+    assert pool.match_prefix([1] * PS + [9])[0] == 0      # oldest evicted
+    assert pool.match_prefix([2] * PS + [9])[0] == PS     # newer retained
+    assert pool.tables[11][0] == old_slot
+    assert new_slot in pool._retained
     pool.check_invariants()
 
 
