@@ -28,6 +28,12 @@ Three serving-regime sections ride along:
   compressed ``quantized_psum``); measured engine tok/s on a real mesh when
   the host exposes ≥ N devices (e.g. under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+* speculative decoding (``--spec`` / ``REPRO_BENCH_SPEC=1``) — draft–verify
+  with the model-free n-gram drafter on a repetitive-prompt workload:
+  measured acceptance rate, mean tokens per verify step, greedy parity vs
+  the non-speculative engine, and the modeled weight-stream bytes per token
+  (the γ+1-row verify panel streams the quantized weights once for up to
+  γ+1 emitted tokens — the memory-roofline win).
 
 Emits ``BENCH_decode.json`` at the repo root so the serving-roofline
 trajectory is recorded run over run. The headline acceptance ratio is
@@ -48,6 +54,7 @@ from benchmarks.common import csv_row
 
 _TINY = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
 _MESH_TP = int(os.environ.get("REPRO_BENCH_MESH", "0"))
+_SPEC = bool(int(os.environ.get("REPRO_BENCH_SPEC", "1")))
 
 BATCHES = (1, 2) if _TINY else (1, 8, 32)
 PROMPT = 8 if _TINY else 32
@@ -57,6 +64,10 @@ PAGE_SIZE = 8 if _TINY else 16
 PREFIX_SEQS = 2 if _TINY else 8
 PREFIX_LEN = 16 if _TINY else 64
 PREFILL_PROMPT = 32 if _TINY else 128
+SPEC_GAMMA = 4
+SPEC_PATTERN = 6 if _TINY else 8        # repeated n-gram length
+SPEC_REPEATS = 4 if _TINY else 8
+SPEC_NEW = 16 if _TINY else 48          # tokens generated per engine
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_decode.json")
@@ -88,9 +99,11 @@ def modeled_bytes_step(cfg, batch: int, kind: str, *, mean_len: float,
         write = batch * nl * 2 * (per_tok * page_size * 1 + kv * 4)
     elif kind == "paged-int8":
         pages = mean_len / page_size + 0.5            # half-empty last page
-        read = batch * nl * 2 * (per_tok * page_size * 1 + kv * 4) * pages
+        page_by = page_size * (per_tok * 1 + kv * 4)  # int8 + per-token scale
+        read = batch * nl * 2 * page_by * pages
         read += batch * nl * np.ceil(mean_len / page_size) * 4  # block table
-        write = batch * nl * 2 * (per_tok * page_size * 1 + kv * 4)
+        # write-once append: one token row + its scale, no page requantize
+        write = batch * nl * 2 * (per_tok * 1 + kv * 4)
     else:
         raise ValueError(kind)
     return float(read + write)
@@ -227,7 +240,58 @@ def _tensor_parallel_entry(cfg, params, tp: int, mean_len: float):
     return entry
 
 
-def rows(mesh_tp: int = _MESH_TP):
+def _speculative_entry(cfg, params):
+    """N-gram draft–verify on a repetitive prompt vs the plain engine.
+
+    Repetitive contexts (code, retrieved documents, generation loops) are
+    where prompt-lookup drafting shines; tiny greedy models also settle
+    into cycles, so the drafter keeps predicting the continuation and the
+    verify panel amortizes the weight stream over several emitted tokens.
+    """
+    import jax.numpy as jnp
+
+    from repro.serving.engine import ContinuousBatchingEngine
+    from repro.serving.spec_decode import SpecConfig
+    pattern = jax.random.randint(jax.random.PRNGKey(11), (SPEC_PATTERN,), 0,
+                                 cfg.vocab_size)
+    prompt = jnp.tile(pattern, SPEC_REPEATS)
+
+    def run(spec):
+        def once():
+            eng = ContinuousBatchingEngine(
+                params, cfg, kv_dtype="int8", page_size=PAGE_SIZE,
+                capacity_tokens=4 * (int(prompt.shape[0]) + SPEC_NEW),
+                spec=spec)
+            sid = eng.submit(prompt, SPEC_NEW)
+            return eng.run()[sid], eng
+
+        once()                             # warm (compile every panel width)
+        t0 = time.perf_counter()
+        toks, eng = once()
+        return toks, time.perf_counter() - t0, eng
+
+    base_toks, base_dt, _ = run(None)
+    spec = SpecConfig(method="ngram", gamma=SPEC_GAMMA)
+    spec_toks, spec_dt, eng = run(spec)
+    s = eng.spec_summary()
+    # weight-stream roofline: one verify forward streams the weights once
+    # for mean_tokens_per_step emitted tokens
+    tps = max(s["mean_tokens_per_step"], 1.0)
+    return {
+        "method": "ngram", "gamma": SPEC_GAMMA,
+        "prompt_tokens": int(prompt.shape[0]), "new_tokens": SPEC_NEW,
+        "spec_steps": s["spec_steps"], "proposed": s["proposed"],
+        "accepted": s["accepted"],
+        "acceptance_rate": s["acceptance_rate"],
+        "mean_tokens_per_step": s["mean_tokens_per_step"],
+        "greedy_parity": bool(base_toks == spec_toks),
+        "measured_baseline_tok_s": SPEC_NEW / base_dt,
+        "measured_spec_tok_s": SPEC_NEW / spec_dt,
+        "modeled_weight_stream_ratio": 1.0 / tps,
+    }
+
+
+def rows(mesh_tp: int = _MESH_TP, spec: bool = _SPEC):
     from repro.models import init_params
     cfg = _cfg()
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -272,6 +336,17 @@ def rows(mesh_tp: int = _MESH_TP):
         f"chunk {pre['chunk_tokens']} tok, "
         f"{pre['pages_per_step']} pages/grid-step, no dense KV slab")
 
+    if spec:
+        se = _speculative_entry(cfg, params)
+        report["speculative"] = se
+        yield csv_row(
+            "decode_serving/speculative", 1e6 / se["measured_spec_tok_s"],
+            f"ngram gamma={se['gamma']}: acceptance "
+            f"{se['acceptance_rate']:.2f}, "
+            f"{se['mean_tokens_per_step']:.2f} tok/verify-step "
+            f"(weight stream x{se['modeled_weight_stream_ratio']:.2f}); "
+            f"greedy parity {se['greedy_parity']}")
+
     if mesh_tp > 1:
         tpe = _tensor_parallel_entry(cfg, params, mesh_tp, mean_len)
         report["tensor_parallel"] = tpe
@@ -302,6 +377,12 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", type=int, default=_MESH_TP, metavar="TP",
                     help="model-axis degree for the tensor_parallel section "
                          "(0 = off; measured when the host has >= TP devices)")
+    ap.add_argument("--spec", action=argparse.BooleanOptionalAction,
+                    default=_SPEC,
+                    help="emit the speculative-decoding section (n-gram "
+                         "draft-verify on a repetitive-prompt workload); "
+                         "on by default (REPRO_BENCH_SPEC=0 or --no-spec "
+                         "disables)")
     args = ap.parse_args()
-    for row in rows(mesh_tp=args.mesh):
+    for row in rows(mesh_tp=args.mesh, spec=args.spec):
         print(row)

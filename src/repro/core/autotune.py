@@ -325,13 +325,13 @@ def model_paged_decode_time_s(batch: int, kv_heads: int, head_dim: int,
                               mean_len: int, page_size: int) -> float:
     """Analytic v5e time for one layer's paged int8 decode-attention step.
 
-    HBM term: each sequence streams its occupied pages (k+v int8 + per-page
-    f32 scales); the expected half-empty last page charges fragmentation to
-    large pages. Overhead term: one grid step per (seq, kv head, page)
-    charges the per-step issue cost to small pages.
+    HBM term: each sequence streams its occupied pages (k+v int8 +
+    per-token f32 scales); the expected half-empty last page charges
+    fragmentation to large pages. Overhead term: one grid step per
+    (seq, kv head, page) charges the per-step issue cost to small pages.
     """
     pages = mean_len / page_size + 0.5
-    page_bytes = 2 * page_size * head_dim + 2 * 4          # int8 k+v + scales
+    page_bytes = 2 * page_size * (head_dim + 4)   # int8 k+v + per-token scales
     hbm = batch * kv_heads * pages * page_bytes
     steps = batch * kv_heads * math.ceil(mean_len / page_size + 0.5)
     return hbm / _HBM_BW + steps * _STEP_OVERHEAD_S
@@ -380,13 +380,13 @@ def model_paged_prefill_time_s(kv_heads: int, head_dim: int, page_size: int,
     """Analytic v5e per-token time of one layer's chunked paged prefill.
 
     Each chunk re-streams the sequence's cached pages once (k+v int8 +
-    per-page scales), so bigger chunks amortize the restream; one grid step
+    per-token scales), so bigger chunks amortize the restream; one grid step
     covers ``pages_per_step`` pages, so bigger steps amortize issue
     overhead. The (chunk × kv-block) f32 score tile must fit the online-
     softmax working set in VMEM, which bounds both from above.
     """
     n_pages = mean_len / page_size + 0.5
-    page_bytes = 2 * page_size * head_dim + 2 * 4      # int8 k+v + scales
+    page_bytes = 2 * page_size * (head_dim + 4)   # int8 k+v + per-token scales
     hbm = kv_heads * n_pages * page_bytes + chunk * 2 * kv_heads * head_dim * 2
     steps = kv_heads * math.ceil(n_pages / pages_per_step)
     scores = chunk * pages_per_step * page_size * 4    # f32 score tile
@@ -426,6 +426,63 @@ def get_prefill_params(kv_heads: int, head_dim: int, page_size: int,
         if save:
             _save_disk()
     return int(best[0]), int(best[1])
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decoding window tuning (same persistent cache, ``spec|`` keys)
+# ---------------------------------------------------------------------------
+SPEC_GAMMAS = (1, 2, 3, 4, 6, 8)
+DEFAULT_SPEC_GAMMA = 4
+# Marginal cost of one extra verify row relative to a whole decode step.
+# Decode is memory-bound: the weight/cache stream is paid once per forward
+# whether it scores 1 row or γ+1, so extra rows cost only their (tiny)
+# compute slice — the whole reason speculation pays.
+_SPEC_ROW_COST = 0.06
+
+
+def expected_spec_tokens(gamma: int, acceptance: float) -> float:
+    """E[tokens emitted per verify step] under per-token acceptance rate
+    ``acceptance``: 1 + a + a² + … + a^γ (the classic geometric series —
+    the step always emits at least one token)."""
+    a = min(max(acceptance, 0.0), 1.0)
+    if a >= 1.0:
+        return float(gamma + 1)
+    return (1.0 - a ** (gamma + 1)) / (1.0 - a)
+
+
+def get_spec_gamma(acceptance: float, *, draft_cost: float = 0.0,
+                   timer: Optional[Callable] = None,
+                   save: bool = True) -> int:
+    """Cached speculation-window pick from measured acceptance × cost.
+
+    Scores each candidate γ by expected tokens per unit cost, where one
+    verify step costs ``1 + _SPEC_ROW_COST·γ + draft_cost·γ`` decode-step
+    equivalents (``draft_cost``: the drafter's per-token cost ratio — 0 for
+    n-gram lookup, ~0.25 for a small draft model). Acceptance is bucketed
+    to 0.05 so the ``spec|`` key space stays bounded; ``timer(gamma)``
+    overrides the analytic scorer (tests use this). Lives in the same JSON
+    cache as the GEMM blocks, so a window tuned by one serving process is
+    reused by the next.
+    """
+    bucket = round(min(max(acceptance, 0.0), 0.95) * 20) / 20
+    key = f"spec|acc{bucket:.2f}|dc{draft_cost:.2f}|{_backend()}"
+    with _lock:
+        _load_disk()
+        hit = _mem_cache.get(key)
+    if hit is not None:
+        return int(hit["gamma"])
+    score = timer or (lambda g: -expected_spec_tokens(g, bucket)
+                      / (1.0 + _SPEC_ROW_COST * g + draft_cost * g))
+    scores = {g: score(g) for g in SPEC_GAMMAS}
+    best = min(scores, key=scores.get)
+    with _lock:
+        _load_disk()
+        _mem_cache[key] = {"gamma": int(best),
+                           "source": "timer" if timer else "model",
+                           "score": scores[best]}
+        if save:
+            _save_disk()
+    return int(best)
 
 
 def get_blocks(kind: str, m: int, n: int, k: int, *, fused: bool = False,

@@ -7,15 +7,18 @@ step collapses to the pages a sequence actually occupies (not the
 ``(B, max_len)`` slab) at one byte per element — and this kernel never
 materializes an f32 copy of the cache in HBM: pages are gathered via the
 block table with scalar-prefetch BlockSpec index maps, dequantized
-**in-register** with their per-page scale, and consumed by an online-softmax
+**in-register** with their per-token scales, and consumed by an online-softmax
 accumulator held in VMEM scratch.
 
 Layout: q (B, KV, G, hd) — one token per sequence, GQA groups folded per
-kv head. Pages (P, KV, page_size, hd); scales (P, KV); block table
-(B, max_pages) int32; lengths (B,) int32. Grid (B, KV, max_pages), pages
-innermost ('arbitrary') carrying running (m, l, acc) scratch. Pages past a
-sequence's length are skipped via ``pl.when`` (padded block-table slots are
-never touched because the skip test uses lengths, not the table).
+kv head. Pages (P, KV, page_size, hd); scales (P, KV, page_size) — one
+scale per (page, head, token) row, so stored bytes are write-once and
+independent of how tokens were batched into the page (single appends vs
+speculative verify panels). Block table (B, max_pages) int32; lengths (B,)
+int32. Grid (B, KV, max_pages), pages innermost ('arbitrary') carrying
+running (m, l, acc) scratch. Pages past a sequence's length are skipped
+via ``pl.when`` (padded block-table slots are never touched because the
+skip test uses lengths, not the table).
 
 ``impl='auto'`` follows the repo convention: Pallas on TPU, the XLA
 reference elsewhere. The Pallas path requires int8 pages with scales; float
@@ -65,8 +68,9 @@ def paged_attention_reference(q, k_pages, v_pages, k_scale, v_scale, tables,
                               lengths, *, sm_scale: Optional[float] = None):
     """Gather → dequantize → masked softmax, as one jnp expression.
 
-    q: (B, KV, G, hd); pages (P, KV, ps, hd); scales (P, KV) or None;
-    tables (B, max_pages) int32; lengths (B,) int32. Returns (B, KV, G, hd).
+    q: (B, KV, G, hd); pages (P, KV, ps, hd); scales (P, KV, ps) per-token
+    or None; tables (B, max_pages) int32; lengths (B,) int32. Returns
+    (B, KV, G, hd).
     """
     b, kv, g, hd = q.shape
     ps = k_pages.shape[2]
@@ -77,7 +81,7 @@ def paged_attention_reference(q, k_pages, v_pages, k_scale, v_scale, tables,
         x = jnp.take(pages, tables, axis=0)                # (B, mp, KV, ps, hd)
         x = x.astype(jnp.float32)
         if scales is not None:
-            x = x * jnp.take(scales, tables, axis=0)[..., None, None]
+            x = x * jnp.take(scales, tables, axis=0)[..., None]
         x = jnp.swapaxes(x, 1, 2)                          # (B, KV, mp, ps, hd)
         return x.reshape(b, kv, max_pages * ps, hd)
 
@@ -113,9 +117,9 @@ def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     @pl.when(j * ps < length)
     def _step():
         q = q_ref[0, 0].astype(jnp.float32)                        # (G, hd)
-        # in-register dequant: int8 page × its (page, head) scale
-        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]         # (ps, hd)
-        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        # in-register dequant: int8 page × its (token,) per-row scales
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]  # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         col = j * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
@@ -150,7 +154,7 @@ def _paged_attention_pallas(q, k_pages, v_pages, k_scale, v_scale, tables,
         return (tables_ref[bi, ji], hi, 0, 0)
 
     def scale_map(bi, hi, ji, tables_ref, lens_ref):
-        return (tables_ref[bi, ji], hi)
+        return (tables_ref[bi, ji], hi, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -160,8 +164,8 @@ def _paged_attention_pallas(q, k_pages, v_pages, k_scale, v_scale, tables,
                          lambda bi, hi, ji, t, le: (bi, hi, 0, 0)),
             pl.BlockSpec((1, 1, ps, hd), page_map),
             pl.BlockSpec((1, 1, ps, hd), page_map),
-            pl.BlockSpec((1, 1), scale_map, memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1), scale_map, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, ps), scale_map),
+            pl.BlockSpec((1, 1, ps), scale_map),
         ],
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda bi, hi, ji, t, le: (bi, hi, 0, 0)),
@@ -213,8 +217,8 @@ def paged_attention_tp(q, k_pages, v_pages, k_scale, v_scale, tables,
         raise ValueError(
             f"kv heads {kv} not divisible by {axis}={mesh.shape[axis]}")
     head4 = P(None, axis, None, None)
-    head2 = P(None, axis)
-    none_spec = None if k_scale is None else head2
+    head3 = P(None, axis, None)
+    none_spec = None if k_scale is None else head3
 
     def body(q_, kp, vp, ks, vs, tb, ln):
         return paged_attention(q_, kp, vp, ks, vs, tb, ln,

@@ -9,7 +9,7 @@ cached so far, including the pages the chunk itself just wrote:
   scalar-prefetch BlockSpec index maps, ``pages_per_step`` pages per grid
   step — long contexts advance ``pages_per_step × page_size`` tokens per
   step instead of one page per step, amortizing grid-step issue overhead;
-* int8 pages are dequantized **in-register** against their per-page scale
+* int8 pages are dequantized **in-register** against their per-token scales
   (the quantized cache is never f32 in HBM);
 * softmax runs online per q-chunk: running (m, l, acc) scratch in VMEM, one
   output store — the (C, T) score matrix never exists in HBM;
@@ -18,8 +18,14 @@ cached so far, including the pages the chunk itself just wrote:
   skip (every page up to ``q_start + C`` is at least partially visible).
 
 Layout: q (KV, C, G, hd) — one sequence, GQA groups folded per kv head.
-Pages (P, KV, page_size, hd); scales (P, KV); table (max_pages,) int32.
+Pages (P, KV, page_size, hd); scales (P, KV, page_size) — one scale per
+(page, head, token) row (write-once pages); table (max_pages,) int32.
 Grid (KV, ceil(n_pages / pages_per_step)), kv-steps innermost ('arbitrary').
+
+Besides prefill, this is the **speculative-decoding verify** path: a
+γ+1-token panel (last sampled token + γ draft tokens) is exactly a chunk
+whose ``q_start`` is wherever decode left off — usually mid-page, which the
+per-token scales make safe to resume.
 
 ``impl='auto'`` follows the repo convention: Pallas on TPU, the XLA
 reference elsewhere. The Pallas path requires int8 pages with scales; float
@@ -68,8 +74,9 @@ def paged_prefill_reference(q, k_pages, v_pages, k_scale, v_scale, table, *,
                             q_start: int, sm_scale: Optional[float] = None):
     """Gather → dequantize → causally-masked softmax, one jnp expression.
 
-    q: (KV, C, G, hd); pages (P, KV, ps, hd); scales (P, KV) or None;
-    table (max_pages,) int32; ``q_start`` static. Returns (KV, C, G, hd).
+    q: (KV, C, G, hd); pages (P, KV, ps, hd); scales (P, KV, ps) per-token
+    or None; table (max_pages,) int32; ``q_start`` static. Returns
+    (KV, C, G, hd).
     """
     kv, c, g, hd = q.shape
     ps = k_pages.shape[2]
@@ -81,7 +88,7 @@ def paged_prefill_reference(q, k_pages, v_pages, k_scale, v_scale, table, *,
     def gather(pages, scales):
         x = jnp.take(pages, slots, axis=0).astype(jnp.float32)  # (np,KV,ps,hd)
         if scales is not None:
-            x = x * jnp.take(scales, slots, axis=0)[..., None, None]
+            x = x * jnp.take(scales, slots, axis=0)[..., None]
         return jnp.swapaxes(x, 0, 1).reshape(kv, n_pages * ps, hd)
 
     k_all = gather(k_pages, k_scale)
@@ -116,12 +123,13 @@ def _prefill_kernel(table_ref, q_ref, *refs, pp: int, ps: int, g: int,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0].astype(jnp.float32)                            # (C*G, hd)
-    # multi-page kv block: pp pages dequantized in-register and stacked
+    # multi-page kv block: pp pages dequantized in-register (per-token row
+    # scales) and stacked
     k = jnp.concatenate(
-        [k_refs[i][0, 0].astype(jnp.float32) * ks_refs[i][0, 0]
+        [k_refs[i][0, 0].astype(jnp.float32) * ks_refs[i][0, 0][:, None]
          for i in range(pp)], axis=0)                           # (pp*ps, hd)
     v = jnp.concatenate(
-        [v_refs[i][0, 0].astype(jnp.float32) * vs_refs[i][0, 0]
+        [v_refs[i][0, 0].astype(jnp.float32) * vs_refs[i][0, 0][:, None]
          for i in range(pp)], axis=0)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -170,11 +178,10 @@ def _paged_prefill_pallas(q, k_pages, v_pages, k_scale, v_scale, table, *,
         return lambda hi, ji, t: (t[ji * pp + i], hi, 0, 0)
 
     def scale_map(i):
-        return lambda hi, ji, t: (t[ji * pp + i], hi)
+        return lambda hi, ji, t: (t[ji * pp + i], hi, 0)
 
     page_spec = [pl.BlockSpec((1, 1, ps, hd), page_map(i)) for i in range(pp)]
-    scale_spec = [pl.BlockSpec((1, 1), scale_map(i), memory_space=pltpu.SMEM)
-                  for i in range(pp)]
+    scale_spec = [pl.BlockSpec((1, 1, ps), scale_map(i)) for i in range(pp)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(kv, n_steps),
@@ -238,7 +245,7 @@ def paged_prefill_attention_tp(q, k_pages, v_pages, k_scale, v_scale, table,
             f"kv heads {kv} not divisible by {axis}={mesh.shape[axis]}")
     qspec = P(axis, None, None, None)
     head4 = P(None, axis, None, None)
-    sspec = None if k_scale is None else P(None, axis)
+    sspec = None if k_scale is None else P(None, axis, None)
 
     def body(q_, kp, vp, ks, vs, tb):
         return paged_prefill_attention(

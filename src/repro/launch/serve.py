@@ -14,6 +14,16 @@ q/kv/up/gate, row-parallel wo/down via the serve rule table), the paged KV
 pool is head-sharded, and the engine runs every step under the serve-mode
 mesh context. ``--tp-int8-reduce`` compresses the row-parallel all-reduces
 to int8 on the wire.
+
+Speculative decoding (draft–verify over the paged int8 cache):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --qmode w8a8 --batch 1 --steps 32 --spec-method ngram --spec-gamma 4
+
+``--spec-method draft`` drives a small draft LM (``--spec-draft-config``,
+e.g. ``qwen2-0.5b`` drafting for ``qwen2-72b``) over its own paged pool;
+``--spec-gamma auto`` picks the window from the measured acceptance rate
+through the autotune cache's ``spec|`` keys. The γ+1-row verify GEMM
+shapes are pre-tuned alongside the decode/prefill shapes.
 """
 from __future__ import annotations
 
@@ -24,11 +34,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core import autotune
 from repro.launch.mesh import make_serving_mesh
 from repro.models import init_params, quantize_params
 from repro.parallel.sharding import (effective_model_shards, make_rules,
                                      params_pspecs)
-from repro.serving.engine import generate
+from repro.serving.engine import generate, warm_gemm_autotune
+from repro.serving.spec_decode import SpecConfig
 
 
 def shard_params(params, mesh):
@@ -73,6 +85,16 @@ def main():
                     help="model-axis (tensor-parallel) degree; 1 = off")
     ap.add_argument("--tp-int8-reduce", action="store_true",
                     help="int8-compress the row-parallel all-reduces")
+    ap.add_argument("--spec-method", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decoding: model-free n-gram lookup "
+                         "or a small draft model")
+    ap.add_argument("--spec-gamma", default="4",
+                    help="speculation window (draft tokens/step), or 'auto' "
+                         "to pick from the measured acceptance rate")
+    ap.add_argument("--spec-draft-config", default="qwen2-0.5b",
+                    help="draft model arch for --spec-method draft "
+                         "(always built with --reduced shapes)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced, qmode=args.qmode)
@@ -82,6 +104,27 @@ def main():
         t0 = time.time()
         params = quantize_params(params, cfg, args.qmode)
         print(f"[serve] PTQ to {args.qmode} in {time.time()-t0:.2f}s")
+
+    spec = None
+    if args.spec_method != "off":
+        gamma = args.spec_gamma if args.spec_gamma == "auto" \
+            else int(args.spec_gamma)
+        draft_cfg = draft_params = None
+        if args.spec_method == "draft":
+            draft_cfg = get_config(args.spec_draft_config, reduced=True,
+                                   qmode=args.qmode)
+            draft_params = init_params(jax.random.fold_in(key, 1), draft_cfg)
+            if args.qmode != "none":
+                draft_params = quantize_params(draft_params, draft_cfg,
+                                               args.qmode)
+        spec = SpecConfig(method=args.spec_method, gamma=gamma,
+                          draft_cfg=draft_cfg, draft_params=draft_params)
+        # pre-tune the γ+1-row verify panels next to the decode shapes
+        gammas = autotune.SPEC_GAMMAS if gamma == "auto" else (gamma,)
+        warm_gemm_autotune(cfg, batch_sizes=(1, args.batch),
+                           tp=args.tp, spec_gammas=gammas)
+        print(f"[serve] speculative decoding: {args.spec_method}, "
+              f"gamma={gamma}")
 
     mesh = None
     if args.tp > 1:
@@ -99,9 +142,29 @@ def main():
             key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
 
     t0 = time.time()
-    toks = generate(params, cfg, prompt, steps=args.steps, key=key,
-                    sample=args.sample, mesh=mesh,
-                    tp_int8_reduce=args.tp_int8_reduce)
+    if spec is None:
+        toks = generate(params, cfg, prompt, steps=args.steps, key=key,
+                        sample=args.sample, mesh=mesh,
+                        tp_int8_reduce=args.tp_int8_reduce)
+    else:
+        # drive the engine directly so the acceptance stats are reportable
+        from repro.serving.engine import ContinuousBatchingEngine
+        from repro.serving.kv_cache import round_up
+        eng = ContinuousBatchingEngine(
+            params, cfg, kv_dtype="int8",
+            capacity_tokens=args.batch * round_up(
+                args.prompt_len + args.steps, 128),
+            sample=args.sample, key=key, mesh=mesh,
+            tp_int8_reduce=args.tp_int8_reduce, spec=spec)
+        sids = [eng.submit(prompt[i], args.steps)
+                for i in range(args.batch)]
+        outs = eng.run()
+        toks = jnp.asarray([outs[s] for s in sids], jnp.int32)
+        s = eng.spec_summary()
+        print(f"[serve] spec: {s['spec_steps']} verify steps, acceptance "
+              f"{s['acceptance_rate']:.2f}, "
+              f"{s['mean_tokens_per_step']:.2f} tokens/step "
+              f"(gamma={s['gamma']})")
     dt = time.time() - t0
     n_new = toks.shape[0] * toks.shape[1]
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "

@@ -100,7 +100,11 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     * DenseKVCache, S == 1, cache_pos   → decode: append + attend over prefix.
     * PagedPrefillCache                 → chunked paged prefill: quantize the
       chunk's KV straight into block-table pages, causal flash attention
-      over every cached page (no dense KV staging slab).
+      over every cached page (no dense KV staging slab). The speculative
+      engine's γ+1-token **verify panels** ride this same branch — their
+      ``q_start`` resumes mid-page, which the write-once token-granular
+      page format makes exact (the panel reads/writes the very bytes
+      sequential decode would have).
     * PagedDecodeCache, S == 1          → ragged decode: append to block-table
       pages + paged int8 attention (per-sequence positions, no cache_pos).
     """

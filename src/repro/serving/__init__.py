@@ -8,7 +8,13 @@ dense staging slab), ragged decode appends to them
 prefix share physical pages through a trie, and all writes cross a
 copy-on-write barrier. Released prefix pages park in a bounded LRU (trie
 entry intact) so re-submitted prompts re-share them; eviction is LRU-first
-under pool pressure.
+under pool pressure. Pages are **write-once at token granularity** (one
+int8 row + one scale per (page, head, token)), which makes cache state
+independent of how tokens were grouped into writes — the property
+speculative decoding (:mod:`repro.serving.spec_decode`) leans on: draft
+tokens are written, verified by one multi-token forward, and rejected
+suffixes rolled back (``PagePool.truncate``) without perturbing the kept
+prefix.
 
 Serving parallelism
 -------------------
@@ -17,7 +23,7 @@ With a device mesh (``ContinuousBatchingEngine(mesh=...)``, rules from
 ``model`` axis. What is **sharded**:
 
 * KV page *storage* — each device holds ``n_kv_heads / model_shards`` heads
-  of every page, with per-page scales alongside; ingest/append/write_chunk
+  of every page, with per-token scales alongside; ingest/append/write_chunk
   quantize shard-locally and the shard_map attention kernels
   (``paged_attention_tp`` / ``paged_prefill_attention_tp``) read pages
   without any cross-device traffic.
@@ -43,6 +49,13 @@ from repro.serving.kv_cache import (  # noqa: F401
     PagedDecodeCache,
     PagedPrefillCache,
     PagePool,
+)
+from repro.serving.spec_decode import (  # noqa: F401
+    DraftModelDrafter,
+    NGramDrafter,
+    SpecConfig,
+    SpecStats,
+    accept_speculative,
 )
 
 _ENGINE_EXPORTS = (

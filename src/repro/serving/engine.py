@@ -33,6 +33,15 @@ runs under the serve-mode sharding rules — KV pages head-sharded over the
 model axis, shard_map attention kernels, row-parallel output projections
 with (optionally int8-compressed) all-reduces — while the scheduler itself
 remains ordinary replicated host code.
+
+The continuous engine also speaks **speculative decoding** (``spec=``):
+the decode lane swaps single-token steps for draft–verify panels — a
+drafter (:mod:`repro.serving.spec_decode`) proposes γ tokens, one
+γ+1-token forward over the paged cache scores them, exact
+acceptance–rejection keeps the agreed prefix and the pool's token-granular
+``truncate`` rolls the rest back. Greedy speculative streams are
+bit-identical to non-speculative ones; temperature streams preserve the
+target distribution.
 """
 from __future__ import annotations
 
@@ -52,6 +61,7 @@ from repro.models.transformer import forward, init_caches
 from repro.parallel.sharding import (effective_model_shards, make_rules,
                                      mesh_context)
 from repro.serving import kv_cache as kvc
+from repro.serving import spec_decode as sd
 
 
 def init_serve_caches(cfg: ModelConfig, batch: int, max_len: int,
@@ -67,7 +77,8 @@ _QMODE_KIND = {"w8a8": "i8", "w4a8": "w4", "w4a4": "a4w4"}
 
 
 def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
-                       prefill_len: int = 0, measure=None, tp: int = 1):
+                       prefill_len: int = 0, measure=None, tp: int = 1,
+                       spec_gammas=()):
     """Pre-tune CAMP GEMM blocks for the transformer's serving linears.
 
     Decode runs one token per sequence (M = batch) and prefill runs
@@ -87,6 +98,12 @@ def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
     the persistent cache are skipped, so serve-mode warming (which visits
     both the sharded and the replicated-fallback shapes across engine
     restarts) never tunes the same (M, N, K) twice.
+
+    ``spec_gammas`` adds the speculative-decoding verify panels: a γ-token
+    draft is verified by one (γ+1)-row forward per sequence, and drafters
+    routinely propose *fewer* than γ tokens (no n-gram match, short
+    continuations, end-of-budget clipping), so every partial panel width
+    M ∈ [2, γ+1] joins the enumeration for each candidate window.
 
     Returns [((m, n, k), (bm, bn, bk)), ...] for logging.
     """
@@ -114,7 +131,8 @@ def warm_gemm_autotune(cfg: ModelConfig, *, batch_sizes=(1, 8, 32),
     if not cfg.tie_embeddings:
         proj.add(shard(d, cfg.vocab_size, row_parallel=False))  # lm head
     ms = sorted({b * max(prefill_len, 1) for b in batch_sizes} |
-                set(batch_sizes))
+                set(batch_sizes) |
+                {m for g in spec_gammas for m in range(2, g + 2)})
     shapes = {(m, n, k) for m in ms for (k, n) in proj}
     if cfg.moe_experts:
         # expert GEMMs run at M = groups × capacity, not M = tokens
@@ -182,6 +200,7 @@ class Request:
     tokens: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0                         # prompt tokens cached so far
     done: bool = False
+    spec: sd.SpecStats = dataclasses.field(default_factory=sd.SpecStats)
 
     def __post_init__(self):
         # host-side token tuple: prefix-trie keys + chunk slicing without
@@ -220,7 +239,7 @@ class ContinuousBatchingEngine:
 
     Per-sequence results are independent of co-scheduling: pages are owned
     exclusively or shared immutably (every write path crosses the pool's
-    copy-on-write barrier), per-page scales depend only on a page's own
+    copy-on-write barrier), per-token scales depend only on a token's own
     content, attention is masked per sequence length, chunk boundaries
     depend only on the engine's static chunk size, and sampling keys are
     derived per (seq_id, token index) — a sequence decodes identically
@@ -236,7 +255,29 @@ class ContinuousBatchingEngine:
     admission/retirement logic is identical with and without a mesh; a
     kv-head count indivisible by the model axis degrades to replicated
     attention and the engine behaves exactly as on a single device.
+
+    **Speculative decoding.** With ``spec=``
+    (:class:`repro.serving.spec_decode.SpecConfig`, method 'ngram' or
+    'draft'), the decode lane runs **draft–verify** steps instead of
+    single-token ragged decodes: per active sequence, the drafter proposes
+    up to γ tokens, their KV is written into the sequence's pages (crossing
+    the COW barrier page by page) and the whole γ+1-token panel is scored
+    by ONE forward through the chunked paged-prefill path — then exact
+    acceptance–rejection keeps the agreed prefix and
+    :meth:`~repro.serving.kv_cache.PagePool.truncate` rolls the rejected
+    suffix back. Write-once token-granular pages make the rollback
+    bit-exact, so greedy speculative streams are identical to
+    non-speculative ones and temperature streams preserve the target
+    distribution for any drafter. Speculation targets small-batch,
+    latency-bound serving (the verify forwards run per sequence);
+    mid-prefill requests keep the normal chunked path, and hybrid
+    SSM/RWKV models never reach this engine at all. Drafting always runs
+    replicated (outside the mesh scope); only verification is
+    tensor-parallel. ``gamma='auto'`` re-picks the window from the
+    measured acceptance rate through the autotune cache's ``spec|`` keys.
     """
+
+    SPEC_RETUNE_EVERY = 16               # spec steps between auto-γ re-picks
 
     def __init__(self, params, cfg: ModelConfig, *,
                  kv_dtype: Optional[str] = "int8",
@@ -247,7 +288,8 @@ class ContinuousBatchingEngine:
                  sample: str = "greedy", temperature: float = 1.0,
                  key: Optional[jax.Array] = None,
                  mesh=None, rules=None, tp_int8_reduce: bool = False,
-                 retain_pages: Optional[int] = None):
+                 retain_pages: Optional[int] = None,
+                 spec: Optional[sd.SpecConfig] = None):
         mixers = {cfg.mixer_of(i) for i in range(cfg.n_layers)}
         if mixers != {"attn"}:
             raise ValueError(
@@ -286,6 +328,21 @@ class ContinuousBatchingEngine:
         self.active: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._next_id = 0
+        # -- speculative decoding ---------------------------------------
+        self.spec_cfg = spec if spec is not None and spec.method != "off" \
+            else None
+        self.drafter = None
+        self.spec_totals = sd.SpecStats()
+        if self.spec_cfg is not None:
+            self.drafter = sd.make_drafter(
+                self.spec_cfg, sample=sample, temperature=temperature,
+                key=jax.random.fold_in(self.key, 0x5bec))
+            self._spec_auto = self.spec_cfg.gamma == "auto"
+            self._spec_last_tune = 0
+            self.spec_gamma = (autotune.DEFAULT_SPEC_GAMMA if self._spec_auto
+                               else int(self.spec_cfg.gamma))
+            if self.spec_gamma < 1:
+                raise ValueError(f"spec gamma {self.spec_gamma} < 1")
 
     def _mesh_scope(self):
         """Serve-mode mesh context for one engine step (no-op without mesh)."""
@@ -324,6 +381,8 @@ class ContinuousBatchingEngine:
 
     def _finish(self, req: Request) -> None:
         self.pool.release(req.seq_id)
+        if self.drafter is not None:
+            self.drafter.release(req.seq_id)
         req.done = True
         self.finished[req.seq_id] = req
 
@@ -354,26 +413,14 @@ class ContinuousBatchingEngine:
     def _run_prefill_chunk(self, req: Request, chunk: int,
                            need_logits: bool):
         """One chunk of paged prefill: tokens [pos, pos+chunk) straight into
-        the pool's pages (no dense staging slab)."""
+        the pool's pages (no dense staging slab). Mid-prompt chunks skip
+        the vocabulary head entirely."""
         t0 = req.pos
-        toks = req.prompt[None, t0:t0 + chunk]
-        positions = (t0 + jnp.arange(chunk))[None]
-        caches = [{"attn": self.pool.prefill_cache(i, req.seq_id, t0,
-                                                   self.pages_per_step)}
-                  for i in range(self.cfg.n_layers)]
-        if need_logits:
-            logits, new_caches, _ = forward(
-                self.params, self.cfg, toks, positions=positions,
-                caches=caches, last_logits_only=True)
-        else:
-            # mid-prompt chunk: skip the vocabulary head entirely
-            logits, new_caches, _ = forward(
-                self.params, self.cfg, toks, positions=positions,
-                caches=caches, return_hidden=True)
-            logits = None
-        for i, layer in enumerate(new_caches):
-            self.pool.writeback(i, layer["attn"])
-        self.pool.lens[req.seq_id] = t0 + chunk
+        logits = sd.paged_chunk_forward(
+            self.params, self.cfg, self.pool, req.seq_id,
+            req.prompt[t0:t0 + chunk], t0,
+            pages_per_step=self.pages_per_step,
+            logits="last" if need_logits else "none")
         req.pos = t0 + chunk
         return logits
 
@@ -435,6 +482,85 @@ class ContinuousBatchingEngine:
             else:
                 self.active.append(r)
 
+    # -- speculative decode lane -----------------------------------------
+    def _spec_verify(self, req: Request, draft: List[int]) -> np.ndarray:
+        """Score [last_sampled] + draft in one forward over the paged cache.
+
+        The panel's KV is written into the sequence's pages first (each
+        touched page crosses the COW barrier), then the γ+1-token query
+        attends over the whole cached prefix through the chunked
+        paged-prefill path — ``q_start`` is wherever decode left off,
+        page-aligned or not. Returns the (γ+1, V) f32 logit rows; the
+        caller rolls the rejected suffix back with ``pool.truncate``.
+        """
+        L = self.pool.lens[req.seq_id]
+        m = 1 + len(draft)
+        ps = self.pool.page_size
+        for pidx in range(L // ps, (L + m - 1) // ps + 1):
+            self.pool.ensure_writable(req.seq_id, pidx)
+        with self._mesh_scope():
+            logits = sd.paged_chunk_forward(
+                self.params, self.cfg, self.pool, req.seq_id,
+                [req.tokens[-1]] + draft, L,
+                pages_per_step=self.pages_per_step, logits="all")
+        return np.asarray(logits[0], np.float32)
+
+    def _spec_one(self, req: Request) -> None:
+        """One draft–verify–rollback step for one active sequence."""
+        remaining = req.max_new_tokens - len(req.tokens)
+        gamma = min(self.spec_gamma, remaining - 1)
+        draft, draft_q = ([], None)
+        if gamma > 0:
+            # drafting always runs replicated (the verify forward below is
+            # the only mesh-parallel part of a speculative step); the draft
+            # reservation covers the largest window auto-tuning could pick
+            gamma_cap = max(self.spec_gamma, max(autotune.SPEC_GAMMAS))
+            draft, draft_q = self.drafter.propose(
+                req.seq_id, list(req.prompt_tokens) + req.tokens, gamma,
+                reserve_tokens=req.reserve_tokens + gamma_cap + 1)
+        L = self.pool.lens[req.seq_id]
+        rows = self._spec_verify(req, draft)
+        n_acc, emitted = sd.accept_speculative(
+            rows, draft, draft_q, sample=self.sample,
+            temperature=self.temperature, key=self.key, seq_id=req.seq_id,
+            start_index=len(req.tokens))
+        # the cache must hold everything but the last emitted token
+        self.pool.truncate(req.seq_id, L + n_acc + 1)
+        req.tokens.extend(emitted)
+        req.spec.add(len(draft), n_acc, len(emitted))
+        self.spec_totals.add(len(draft), n_acc, len(emitted))
+        if len(req.tokens) >= req.max_new_tokens:
+            self._finish(req)
+        else:
+            self.active.append(req)
+
+    def _spec_step(self) -> None:
+        """Draft–verify every active sequence (replaces the ragged decode)."""
+        reqs = list(self.active)
+        self.active = []
+        for r in reqs:
+            self._spec_one(r)
+        if (self._spec_auto and self.spec_totals.steps
+                - self._spec_last_tune >= self.SPEC_RETUNE_EVERY):
+            self._spec_last_tune = self.spec_totals.steps
+            self.spec_gamma = autotune.get_spec_gamma(
+                self.spec_totals.acceptance_rate,
+                draft_cost=self.drafter.cost_ratio)
+
+    def spec_summary(self) -> Dict:
+        """Aggregate + per-request draft/verify stats (finished AND
+        in-flight requests, so mid-serve polling sees every sequence the
+        aggregate counters cover)."""
+        reqs = list(self.finished.values()) + self.active \
+            + list(self.prefilling) + list(self.waiting)
+        per = {r.seq_id: r.spec.summary()
+               for r in sorted(reqs, key=lambda r: r.seq_id)}
+        out = self.spec_totals.summary()
+        out.update(enabled=self.drafter is not None,
+                   gamma=self.spec_gamma if self.drafter is not None else 0,
+                   per_request=per)
+        return out
+
     # -- driving ---------------------------------------------------------
     def step(self) -> bool:
         """Admit what fits, one prefill chunk, one ragged decode step.
@@ -445,11 +571,15 @@ class ContinuousBatchingEngine:
         both stay bounded regardless of prompt length.
         """
         self._admit()
-        with self._mesh_scope():
-            if self.prefilling:
+        if self.prefilling:
+            with self._mesh_scope():
                 self._prefill_step()
-            if self.active:
-                self._decode()
+        if self.active:
+            if self.drafter is not None:
+                self._spec_step()        # wraps only the verify in the mesh
+            else:
+                with self._mesh_scope():
+                    self._decode()
         return bool(self.active or self.waiting or self.prefilling)
 
     def run(self) -> Dict[int, List[int]]:
@@ -486,13 +616,16 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
              max_len: Optional[int] = None, kv_dtype: Optional[str] = None,
              page_size: Optional[int] = None, mesh=None,
              tp_int8_reduce: bool = False,
-             retain_pages: Optional[int] = None):
+             retain_pages: Optional[int] = None,
+             spec: Optional[sd.SpecConfig] = None):
     """Batched generation: prompt (B, S) → (B, steps) new tokens.
 
     All-attention models run on the continuous-batching engine (paged pool;
     pages are int8 when ``kv_dtype='int8'``, else the model dtype). Models
-    with SSM/RWKV mixers fall back to the dense-slab loop. ``mesh`` turns on
-    tensor-parallel serving (see :class:`ContinuousBatchingEngine`).
+    with SSM/RWKV mixers fall back to the dense-slab loop (``spec`` is
+    ignored there — speculation needs the paged cache's rollback). ``mesh``
+    turns on tensor-parallel serving and ``spec`` turns on speculative
+    decoding (see :class:`ContinuousBatchingEngine`).
     """
     b, s = prompt.shape[:2]
     if (cfg.embedding_inputs
@@ -505,7 +638,8 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
         params, cfg, kv_dtype=kv_dtype, page_size=ps,
         capacity_tokens=b * kvc.round_up(s + steps, ps),
         sample=sample, temperature=temperature, key=key,
-        mesh=mesh, tp_int8_reduce=tp_int8_reduce, retain_pages=retain_pages)
+        mesh=mesh, tp_int8_reduce=tp_int8_reduce, retain_pages=retain_pages,
+        spec=spec)
     sids = [eng.submit(prompt[i], steps) for i in range(b)]
     outs = eng.run()
     return jnp.asarray([outs[sid] for sid in sids], jnp.int32)

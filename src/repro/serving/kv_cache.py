@@ -4,11 +4,19 @@ the serving cache itself.
 Decode is memory-roofline-bound: every generated token re-reads the whole
 KV cache. Two orthogonal reductions live here:
 
-* **int8 storage with per-page dynamic scales** — each (page, kv-head) slice
-  carries its own scale (amax/127 of the page content), replacing the old
-  global hard-coded ``KV_INT8_SCALE``. Keys after rope/qk-norm are O(1) but
-  not uniformly so across layers and heads; dynamic per-page scales keep the
-  quantization step proportional to the *local* magnitude.
+* **int8 storage with token-granular dynamic scales** — each
+  (page, kv-head, token) row carries its own scale (amax/127 over the head
+  dim), replacing the old global hard-coded ``KV_INT8_SCALE``. Keys after
+  rope/qk-norm are O(1) but not uniformly so across layers, heads and
+  positions; dynamic per-token scales keep the quantization step
+  proportional to the *local* magnitude. Token granularity also makes every
+  page **write-once**: a token's stored bytes are a pure function of its own
+  k/v values, never requantized when a neighbour lands in the same page —
+  so the cache state after N tokens is bit-identical no matter how the
+  writes were grouped (single appends, prefill chunks, or speculative
+  panels), which is what lets speculative decoding roll a rejected draft
+  suffix back (:meth:`PagePool.truncate`) without perturbing the kept
+  prefix.
 * **paging** — KV lives in fixed-size pages owned by a shared pool;
   per-sequence block tables map logical positions to page slots. Decode
   reads only the pages a sequence actually occupies instead of a
@@ -30,7 +38,7 @@ re-prefilling.
 
 Under tensor-parallel serving the pool's page storage is **head-sharded**
 over a mesh's ``model`` axis (``PagePool(mesh=...)``): each device holds its
-``n_kv_heads / model_shards`` heads of every page, per-page scales shard
+``n_kv_heads / model_shards`` heads of every page, per-token scales shard
 alongside, and all allocator/trie/block-table state stays replicated
 host-side control metadata.
 
@@ -108,9 +116,13 @@ def _chunk_to_pages(x: jax.Array, n_pages: int, page_size: int) -> jax.Array:
 
 
 def _quantize_page_block(xp: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """(np, KV, ps, hd) f32 → (int8 payload, (np, KV) per-page scales)."""
-    sc = int8_scale(xp, axes=(2, 3))
-    return quantize_int8(xp, sc[..., None, None]), sc
+    """(np, KV, ps, hd) f32 → (int8 payload, (np, KV, ps) per-token scales).
+
+    One scale per (page, head, token) row, computed over the head dim only —
+    a token's stored bytes depend on nothing but its own values (write-once
+    pages; see the module docstring)."""
+    sc = int8_scale(xp, axes=(3,))
+    return quantize_int8(xp, sc[..., None]), sc
 
 
 def _quantize_pages(x: jax.Array, page_size: int) -> Tuple[jax.Array, jax.Array]:
@@ -264,10 +276,11 @@ class PagedDecodeCache:
     """One attention layer's paged KV for one batched decode step.
 
     ``k_pages``/``v_pages``: (P, KV, page_size, hd) pool pages (int8 when
-    quantized, else the model dtype). ``k_scale``/``v_scale``: (P, KV) f32
-    per-page scales (None for float pages). ``tables``: (B, max_pages) int32
-    block table (rows padded with slot 0 past a sequence's last page).
-    ``lengths``: (B,) int32 tokens currently cached per sequence.
+    quantized, else the model dtype). ``k_scale``/``v_scale``:
+    (P, KV, page_size) f32 per-token scales (None for float pages).
+    ``tables``: (B, max_pages) int32 block table (rows padded with slot 0
+    past a sequence's last page). ``lengths``: (B,) int32 tokens currently
+    cached per sequence.
     """
     k_pages: jax.Array
     v_pages: jax.Array
@@ -287,34 +300,26 @@ class PagedDecodeCache:
     def append(self, k_new: jax.Array, v_new: jax.Array) -> "PagedDecodeCache":
         """Append one token per sequence: k_new/v_new (B, KV, hd).
 
-        Each sequence's target page is requantized in place: gather →
-        dequantize with the old per-page scale → insert the token (masking
-        stale tail positions from previously-evicted occupants) → recompute
-        the page scale → scatter back. Sequences own disjoint pages, so the
-        batched scatter never collides.
+        Token-granular scales make this a pure **write-once** scatter: the
+        new token's bytes and scale land in its (page, offset) row and no
+        neighbouring token is ever requantized. Stale rows past a sequence's
+        length (from evicted occupants or rolled-back speculation) are never
+        read — every consumer masks by ``lengths``. Sequences own disjoint
+        pages, so the batched scatter never collides.
         """
         ps = self.page_size
         pidx = self.lengths // ps                                  # (B,)
         slot = jnp.take_along_axis(self.tables, pidx[:, None], axis=1)[:, 0]
         off = self.lengths % ps                                    # (B,)
-        idx = jnp.arange(ps)
-        keep = (idx[None, :] < off[:, None])[:, None, :, None]     # (B,1,ps,1)
-        ins = (idx[None, :] == off[:, None])[:, None, :, None]
 
         def upd(pages, scales, new):
-            gathered = pages[slot]                                 # (B,KV,ps,hd)
             if scales is None:
-                pf = jnp.where(keep, gathered, 0)
-                pf = pf + new[:, :, None, :].astype(pages.dtype) * ins.astype(
-                    pages.dtype)
-                return pages.at[slot].set(pf), None
-            sc = scales[slot]                                      # (B,KV)
-            pf = gathered.astype(jnp.float32) * sc[..., None, None]
-            pf = jnp.where(keep, pf, 0.0) + \
-                new[:, :, None, :].astype(jnp.float32) * ins
-            sc_new = int8_scale(pf, axes=(2, 3))                   # (B,KV)
-            pq = quantize_int8(pf, sc_new[..., None, None])
-            return pages.at[slot].set(pq), scales.at[slot].set(sc_new)
+                return pages.at[slot, :, off].set(new.astype(pages.dtype)), \
+                    None
+            sc = int8_scale(new, axes=(-1,))                       # (B, KV)
+            q = quantize_int8(new, sc[..., None])
+            return (pages.at[slot, :, off].set(q),
+                    scales.at[slot, :, off].set(sc))
 
         k_pages, k_scale = upd(self.k_pages, self.k_scale, k_new)
         v_pages, v_scale = upd(self.v_pages, self.v_scale, v_new)
@@ -343,15 +348,18 @@ jax.tree_util.register_pytree_node(PagedDecodeCache, _paged_flatten,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class PagedPrefillCache:
-    """One attention layer's paged KV for one sequence's prefill chunk.
+    """One attention layer's paged KV for one sequence's multi-token chunk.
 
     ``k_pages``/``v_pages``/``k_scale``/``v_scale``: the pool's per-layer
     arrays (see :class:`PagedDecodeCache`). ``table``: (max_pages,) int32 —
     this sequence's block table. ``q_start``: tokens already cached before
-    this chunk (static; the engine keeps it page-aligned so a chunk only
-    ever writes whole fresh pages plus, for the final chunk, one partial
-    page quantized exactly once). ``pages_per_step``: kv pages fetched per
-    grid step by the prefill kernel (autotuned, static).
+    this chunk (static). The prefill lane keeps it page-aligned (whole
+    fresh pages per chunk); a **speculative verify panel** starts wherever
+    decode left off — unaligned starts take the token-scatter write path,
+    which lands each token's write-once bytes in its (page, offset) row
+    without touching earlier tokens in a partial tail page.
+    ``pages_per_step``: kv pages fetched per grid step by the prefill
+    kernel (autotuned, static).
     """
     k_pages: jax.Array
     v_pages: jax.Array
@@ -372,26 +380,44 @@ class PagedPrefillCache:
     def write_chunk(self, k_t: jax.Array, v_t: jax.Array) -> "PagedPrefillCache":
         """Quantize a chunk's KV (1, KV, C, hd) into pages [q_start, q_start+C).
 
-        Every page written here is exclusively owned (prefix-shared pages
-        cover only the tokens the engine skipped), so no COW is needed on
-        this path. The trailing pad of a partial final page stays zero; a
-        later decode append requantizes that page through
-        :meth:`PagedDecodeCache.append`, which masks the stale tail.
+        Every page row written here is exclusively owned — prefix-shared
+        pages cover only the tokens the engine skipped, and the engine's
+        speculative path crosses :meth:`PagePool.ensure_writable` first —
+        so no COW happens inside this write. Page-aligned starts (the
+        prefill lane) scatter whole pages at once; unaligned starts (a
+        speculative verify panel resuming mid-page) scatter per token, so
+        the earlier tokens of a partial tail page keep their write-once
+        bytes. Either way each token is quantized exactly once, from its
+        exact values, with its own scale — grouping never changes the
+        stored bits.
         """
         ps = self.page_size
         c = k_t.shape[2]
-        if self.q_start % ps:
-            raise ValueError(f"chunk start {self.q_start} not page-aligned")
-        p0 = self.q_start // ps
-        n_w = -(-c // ps)
-        slots = jax.lax.dynamic_slice(self.table, (p0,), (n_w,))
+        if self.q_start % ps == 0:
+            p0 = self.q_start // ps
+            n_w = -(-c // ps)
+            slots = jax.lax.dynamic_slice(self.table, (p0,), (n_w,))
 
-        def upd(pages, scales, x):
-            xp = _chunk_to_pages(x, n_w, ps)
-            if scales is None:
-                return pages.at[slots].set(xp.astype(pages.dtype)), None
-            xq, sc = _quantize_page_block(xp)
-            return pages.at[slots].set(xq), scales.at[slots].set(sc)
+            def upd(pages, scales, x):
+                xp = _chunk_to_pages(x, n_w, ps)
+                if scales is None:
+                    return pages.at[slots].set(xp.astype(pages.dtype)), None
+                xq, sc = _quantize_page_block(xp)
+                return pages.at[slots].set(xq), scales.at[slots].set(sc)
+        else:
+            pos = self.q_start + jnp.arange(c)
+            slots = self.table[pos // ps]                          # (C,)
+            offs = pos % ps                                        # (C,)
+
+            def upd(pages, scales, x):
+                tok = jnp.swapaxes(x[0], 0, 1)                     # (C, KV, hd)
+                if scales is None:
+                    return pages.at[slots, :, offs].set(
+                        tok.astype(pages.dtype)), None
+                sc = int8_scale(tok, axes=(-1,))                   # (C, KV)
+                q = quantize_int8(tok.astype(jnp.float32), sc[..., None])
+                return (pages.at[slots, :, offs].set(q),
+                        scales.at[slots, :, offs].set(sc))
 
         k_pages, k_scale = upd(self.k_pages, self.k_scale, k_t)
         v_pages, v_scale = upd(self.v_pages, self.v_scale, v_t)
@@ -462,10 +488,20 @@ class PagePool:
     ``n_kv_heads``), page and scale *storage* is laid out head-sharded over
     the model axis — each device holds ``n_kv_heads / model`` heads of every
     page — while all control state (free list, refcounts, block tables,
-    trie) stays replicated host-side. Per-page scales are per (page, head),
+    trie) stays replicated host-side. Scales are per (page, head, token),
     so quantization during ingest/append/write_chunk is shard-local and the
     int8 pages are never gathered in HBM; the head-sharded shard_map
     attention kernels consume the storage exactly as laid out.
+
+    **Rollback.** :meth:`truncate` rewinds a sequence to its first
+    ``n`` tokens — the speculative-decoding engine calls it to discard a
+    rejected draft suffix. Pages are write-once at token granularity, so
+    the rewind is pure metadata: the kept prefix's bytes are untouched
+    (bit-identical to never having written the suffix), stale rows past the
+    new length are masked by every reader and overwritten by later appends.
+    ``drop_unused_pages=True`` additionally trims the block table to the
+    pages the new length needs, decreffing the rest (retention/trie rules
+    as in :meth:`release`).
     """
 
     def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
@@ -486,7 +522,7 @@ class PagePool:
             self.mesh = mesh
             self._page_sharding = NamedSharding(
                 mesh, P(None, "model", None, None))
-            self._scale_sharding = NamedSharding(mesh, P(None, "model"))
+            self._scale_sharding = NamedSharding(mesh, P(None, "model", None))
         shape = (num_pages, n_kv_heads, page_size, head_dim)
         page_dtype = jnp.int8 if quantized else dtype
 
@@ -495,8 +531,9 @@ class PagePool:
                              self._page_sharding)
 
         def scales():
-            return self._pin(jnp.full((num_pages, n_kv_heads), SCALE_EPS,
-                                      jnp.float32), self._scale_sharding)
+            return self._pin(jnp.full((num_pages, n_kv_heads, page_size),
+                                      SCALE_EPS, jnp.float32),
+                             self._scale_sharding)
 
         self.k_pages: List[jax.Array] = [pages() for _ in range(n_layers)]
         self.v_pages: List[jax.Array] = [pages() for _ in range(n_layers)]
@@ -558,7 +595,8 @@ class PagePool:
         """HBM bytes one page slot occupies across all layers (k + v)."""
         per = self.n_kv_heads * self.page_size * self.head_dim
         itemsize = 1 if self.quantized else jnp.dtype(self.dtype).itemsize
-        scale = 2 * 4 * self.n_kv_heads if self.quantized else 0
+        scale = (2 * 4 * self.n_kv_heads * self.page_size
+                 if self.quantized else 0)
         return self.n_layers * (2 * per * itemsize + scale)
 
     # -- prefix trie -----------------------------------------------------
@@ -709,6 +747,38 @@ class PagePool:
             self._incref(slot)
         self.tables[child_id] = list(table)
         self.lens[child_id] = self.lens[parent_id]
+
+    def truncate(self, seq_id: int, n_tokens: int, *,
+                 drop_unused_pages: bool = False) -> None:
+        """Token-granular rollback: rewind ``seq_id`` to its first
+        ``n_tokens`` tokens.
+
+        Write-once pages make this pure metadata — the kept prefix is
+        bit-identical to a history in which the dropped suffix was never
+        written; rows past the new length are masked by every reader and
+        overwritten (token by token) by whatever comes next. The engine's
+        speculative-decoding path calls this after verification to discard
+        a rejected draft suffix while keeping the sequence's worst-case
+        page reservation (the rewound positions will be rewritten).
+
+        ``drop_unused_pages=True`` also trims the block table to the pages
+        ``n_tokens`` needs and decrefs the dropped slots — shared slots
+        survive under their other holders, trie-indexed slots whose last
+        reference dies park in the retained LRU, the rest return to the
+        free list (exactly :meth:`release` semantics, suffix-only). Note a
+        rewind never forces COW by itself: a later write into a still-
+        shared tail page crosses :meth:`ensure_writable` as usual.
+        """
+        if not 0 <= n_tokens <= self.lens[seq_id]:
+            raise ValueError(
+                f"truncate({seq_id}, {n_tokens}): cached {self.lens[seq_id]}")
+        self.lens[seq_id] = n_tokens
+        if drop_unused_pages:
+            keep = self.pages_for(n_tokens)
+            table = self.tables[seq_id]
+            for slot in table[keep:]:
+                self._decref(slot)
+            del table[keep:]
 
     def ensure_writable(self, seq_id: int, page_idx: int) -> int:
         """COW barrier: make ``tables[seq_id][page_idx]`` exclusively owned.

@@ -1,0 +1,403 @@
+"""Speculative decoding: draft–verify serving on the paged int8 KV cache.
+
+Batch-1 decode is memory-bound — every step streams the whole quantized
+weight set through the CAMP GEMMs to produce one token. Speculative
+decoding turns that stream into a **multi-token verification panel**: a
+drafter proposes up to γ cheap tokens, the target model scores all of them
+in ONE forward over the paged cache (the γ+1-token query rides the chunked
+paged-prefill kernel path, mid-page ``q_start`` and all), and an exact
+acceptance–rejection step keeps the longest draft prefix the target agrees
+with — emitting between 1 and γ+1 tokens per weight stream. The γ+1-row
+GEMMs are exactly the small-but-dense quantized panels the paper's hybrid
+multiplier targets; ``warm_gemm_autotune(spec_gammas=...)`` pre-tunes them.
+
+Three layers:
+
+* **drafters** — anything satisfying the :class:`Drafter` protocol.
+  :class:`NGramDrafter` is model-free prompt-lookup (continue the most
+  recent earlier occurrence of the trailing n-gram); its proposals are
+  deterministic (one-hot draft distribution). :class:`DraftModelDrafter`
+  runs a small causal LM (any all-attention ``ModelConfig``, e.g.
+  qwen2-0.5b drafting for qwen2-72b) over its **own** paged int8 pool,
+  lazily syncing to the verified history (truncate + catch-up feed) each
+  step, so rejected drafts never pollute its cache.
+* **verification** — :func:`accept_speculative` implements the exact
+  acceptance–rejection rule: accept draft i with probability
+  min(1, p_i(d_i)/q_i(d_i)); on the first rejection sample the residual
+  norm(max(p−q, 0)); if everything is accepted sample one bonus token from
+  the last row. Greedy sampling degenerates to "accept while the draft
+  equals the target argmax" — the emitted stream is *identical* to
+  non-speculative greedy decoding — and temperature sampling preserves the
+  target distribution exactly (the classic speculative-sampling theorem).
+* **rollback** — the engine writes draft KV into the sequence's pages
+  *before* verification (that is what makes the panel one forward), then
+  calls :meth:`PagePool.truncate` to discard the rejected suffix. Pages
+  are write-once at token granularity, so the rollback leaves the kept
+  prefix bit-identical to a run that never speculated.
+
+The engine integration (scheduling, stats, γ autotune) lives in
+:class:`repro.serving.engine.ContinuousBatchingEngine`; this module has no
+engine import.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Configuration + stats
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SpecConfig:
+    """How an engine should speculate.
+
+    ``method``: 'off' | 'ngram' | 'draft'. ``gamma``: speculation window
+    (draft tokens per step), or 'auto' to pick from the measured acceptance
+    rate through the persistent autotune cache (``spec|`` keys).
+    ``draft_cfg``/``draft_params``: the small draft LM for method='draft'.
+    ``ngram_max``/``ngram_min``: prompt-lookup n-gram sizes tried, longest
+    first.
+    """
+    method: str = "off"
+    gamma: Any = 4                       # int or "auto"
+    ngram_max: int = 3
+    ngram_min: int = 1
+    ngram_window: int = 4096             # trailing tokens scanned per lookup
+    draft_cfg: Any = None                # ModelConfig
+    draft_params: Any = None
+    draft_page_size: Optional[int] = None
+    draft_capacity_tokens: Optional[int] = None
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Draft/verify accounting (per request and engine-aggregate)."""
+    steps: int = 0                       # verification forwards run
+    proposed: int = 0                    # draft tokens scored
+    accepted: int = 0                    # draft tokens kept
+    emitted: int = 0                     # tokens emitted by spec steps
+
+    def add(self, proposed: int, accepted: int, emitted: int) -> None:
+        self.steps += 1
+        self.proposed += proposed
+        self.accepted += accepted
+        self.emitted += emitted
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def mean_tokens_per_step(self) -> float:
+        return self.emitted / self.steps if self.steps else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"spec_steps": self.steps, "proposed": self.proposed,
+                "accepted": self.accepted, "emitted": self.emitted,
+                "acceptance_rate": self.acceptance_rate,
+                "mean_tokens_per_step": self.mean_tokens_per_step}
+
+
+# ---------------------------------------------------------------------------
+# One sequence's multi-token chunk through the paged-prefill call path
+# ---------------------------------------------------------------------------
+def paged_chunk_forward(params, cfg, pool, seq_id: int, tokens, start: int, *,
+                        pages_per_step: int = 1, logits: str = "all"):
+    """Drive ``forward()`` over one sequence's chunk via PagedPrefillCache
+    views: write the chunk's KV into the pool's pages, attend over the
+    whole cached prefix, store the functional updates back, advance
+    ``pool.lens``. The one implementation behind the engine's prefill
+    lane, its speculative verify panels, and the draft model's
+    catch-up/propose steps. ``logits``: 'all' (1, C, V) | 'last' (1, 1, V)
+    | 'none' (skip the vocabulary head). ``start`` need not be
+    page-aligned (write-once token rows — see :mod:`~repro.serving.kv_cache`).
+    """
+    from repro.models.transformer import forward  # lazy: avoids an import
+    # cycle through models.attention when repro.serving initializes
+    toks = jnp.asarray(tokens, jnp.int32).reshape(1, -1)
+    c = toks.shape[1]
+    positions = (start + jnp.arange(c))[None]
+    caches = [{"attn": pool.prefill_cache(i, seq_id, start, pages_per_step)}
+              for i in range(cfg.n_layers)]
+    kw = {"last_logits_only": True} if logits == "last" else \
+        {"return_hidden": True} if logits == "none" else {}
+    out, new_caches, _ = forward(params, cfg, toks, positions=positions,
+                                 caches=caches, **kw)
+    for i, layer in enumerate(new_caches):
+        pool.writeback(i, layer["attn"])
+    pool.lens[seq_id] = start + int(c)
+    return None if logits == "none" else out
+
+
+# ---------------------------------------------------------------------------
+# Drafters
+# ---------------------------------------------------------------------------
+class Drafter(Protocol):
+    """Proposes up to ``gamma`` continuation tokens for one sequence.
+
+    ``propose`` returns (tokens, q) where ``q`` is a (len(tokens), V)
+    f32 array of the draft distribution each token was sampled from, or
+    None for a deterministic drafter (one-hot q — acceptance then tests
+    the raw target probability of the proposed token).
+    ``cost_ratio`` is the drafter's rough per-token cost relative to one
+    target decode step (feeds the γ autotune). ``release`` drops any
+    per-sequence state when the engine retires the request.
+    """
+    cost_ratio: float
+
+    def propose(self, seq_id: int, history: Sequence[int], gamma: int, *,
+                reserve_tokens: int = 0
+                ) -> Tuple[List[int], Optional[np.ndarray]]: ...
+
+    def release(self, seq_id: int) -> None: ...
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafting.
+
+    Finds the most recent earlier occurrence of the history's trailing
+    n-gram (n from ``max_n`` down to ``min_n``) and proposes the tokens
+    that followed it. Free to run, deterministic, and very effective on
+    repetitive contexts (code, retrieved documents, generation loops).
+    ``scan_window`` bounds the host-side lookup to the trailing W tokens
+    of the history so a 32k context doesn't pay an O(L) python scan per
+    decode step (matches crop with full positions, so proposals are
+    identical whenever the match lies inside the window).
+    """
+
+    cost_ratio = 0.0
+
+    def __init__(self, max_n: int = 3, min_n: int = 1,
+                 scan_window: int = 4096):
+        if min_n < 1 or max_n < min_n:
+            raise ValueError(f"bad n-gram range [{min_n}, {max_n}]")
+        self.max_n, self.min_n = max_n, min_n
+        self.scan_window = scan_window
+
+    def propose(self, seq_id: int, history: Sequence[int], gamma: int, *,
+                reserve_tokens: int = 0):
+        h = list(history)[-self.scan_window:]
+        for n in range(self.max_n, self.min_n - 1, -1):
+            if len(h) <= n:
+                continue
+            pat = h[-n:]
+            # most recent earlier occurrence with a full-γ continuation
+            # wins; matches flush against the tail only yield their short
+            # suffix, so fall back to the longest continuation seen
+            # (i + n <= len(h) - 1, so a continuation is never empty)
+            best: List[int] = []
+            for i in range(len(h) - n - 1, -1, -1):
+                if h[i:i + n] == pat:
+                    cont = h[i + n:i + n + gamma]
+                    if len(cont) == gamma:
+                        return cont, None
+                    if len(cont) > len(best):
+                        best = cont
+            if best:
+                return best, None
+        return [], None
+
+    def release(self, seq_id: int) -> None:
+        pass
+
+
+class DraftModelDrafter:
+    """A small causal LM drafting over its own paged int8 pool.
+
+    The draft cache is kept consistent with the *verified* history lazily:
+    at each ``propose`` the longest common prefix of the cached tokens and
+    the current history survives (:meth:`PagePool.truncate` rewinds past
+    it — rejected drafts from the previous step fall off here), and the
+    unseen suffix is fed as one catch-up chunk through the same
+    paged-prefill path the target's verifier uses. Then γ single-token
+    steps autoregress the proposals, recording the full draft distribution
+    per token so acceptance–rejection can be exact under temperature
+    sampling.
+    """
+
+    cost_ratio = 0.25
+
+    def __init__(self, params, cfg, *, sample: str = "greedy",
+                 temperature: float = 1.0, key: Optional[jax.Array] = None,
+                 page_size: Optional[int] = None,
+                 capacity_tokens: Optional[int] = None,
+                 pages_per_step: int = 2):
+        from repro.serving import kv_cache as kvc
+        mixers = {cfg.mixer_of(i) for i in range(cfg.n_layers)}
+        if mixers != {"attn"}:
+            raise ValueError(
+                f"draft model needs attention mixers, got {mixers}")
+        self.params, self.cfg = params, cfg
+        self.sample, self.temperature = sample, temperature
+        self.key = jax.random.PRNGKey(1) if key is None else key
+        self.pages_per_step = pages_per_step
+        ps = page_size or kvc.DEFAULT_PAGE_SIZE
+        capacity = capacity_tokens or 8 * cfg.max_seq_len
+        self.pool = kvc.PagePool(
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, num_pages=-(-capacity // ps), page_size=ps,
+            quantized=True, dtype=jnp.dtype(cfg.dtype))
+        self.cached: Dict[int, List[int]] = {}   # tokens whose KV is cached
+
+    def _forward_chunk(self, seq_id: int, tokens: List[int],
+                       start: int) -> np.ndarray:
+        """Feed ``tokens`` at positions [start, start+m); last-row logits."""
+        need = self.pool.pages_for(start + len(tokens))
+        if need > len(self.pool.tables[seq_id]):
+            raise RuntimeError(
+                f"draft seq {seq_id}: {start + len(tokens)} tokens exceed "
+                f"the {len(self.pool.tables[seq_id])}-page reservation")
+        logits = paged_chunk_forward(
+            self.params, self.cfg, self.pool, seq_id, tokens, start,
+            pages_per_step=self.pages_per_step, logits="last")
+        return np.asarray(logits[0, -1], np.float32)
+
+    def propose(self, seq_id: int, history: Sequence[int], gamma: int, *,
+                reserve_tokens: int = 0):
+        history = list(history)
+        if seq_id not in self.pool.tables:
+            need = max(reserve_tokens, len(history) + 1)
+            if not self.pool.can_reserve(need):
+                # the draft pool is its own admission domain: when it can't
+                # hold this sequence, decline to draft (the engine falls
+                # back to plain decode) instead of aborting the serve loop —
+                # space frees up as other sequences finish and release()
+                return [], None
+            self.pool.reserve(seq_id, need)
+            self.cached[seq_id] = []
+        cached = self.cached[seq_id]
+        # survive on the longest verified prefix; rewind the rest
+        n = 0
+        for a, b in zip(cached, history):
+            if a != b:
+                break
+            n += 1
+        if n < len(cached):
+            self.pool.truncate(seq_id, n)
+            del cached[n:]
+        feed = history[n:]               # ≥ 1: history grew since last step
+        tokens: List[int] = []
+        qs: List[np.ndarray] = []
+        for _ in range(gamma):
+            logits = self._forward_chunk(seq_id, feed, len(cached))
+            cached.extend(feed)
+            if self.sample == "greedy":
+                t = int(logits.argmax())
+                qs.append(None)
+            else:
+                p = _softmax(logits / self.temperature)
+                k = jax.random.fold_in(
+                    jax.random.fold_in(self.key, seq_id), len(cached))
+                t = int(jax.random.categorical(k, jnp.asarray(np.log(
+                    np.maximum(p, 1e-30)))))
+                qs.append(p)
+            tokens.append(t)
+            feed = [t]
+        if self.sample == "greedy" or not tokens:
+            return tokens, None
+        return tokens, np.stack(qs)
+
+    def release(self, seq_id: int) -> None:
+        if seq_id in self.pool.tables:
+            self.pool.release(seq_id)
+        self.cached.pop(seq_id, None)
+
+
+def make_drafter(spec: SpecConfig, *, sample: str = "greedy",
+                 temperature: float = 1.0,
+                 key: Optional[jax.Array] = None) -> Drafter:
+    if spec.method == "ngram":
+        return NGramDrafter(max_n=spec.ngram_max, min_n=spec.ngram_min,
+                            scan_window=spec.ngram_window)
+    if spec.method == "draft":
+        if spec.draft_cfg is None or spec.draft_params is None:
+            raise ValueError("method='draft' needs draft_cfg + draft_params")
+        return DraftModelDrafter(
+            spec.draft_params, spec.draft_cfg, sample=sample,
+            temperature=temperature, key=key,
+            page_size=spec.draft_page_size,
+            capacity_tokens=spec.draft_capacity_tokens)
+    raise ValueError(f"unknown spec method {spec.method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Exact acceptance–rejection
+# ---------------------------------------------------------------------------
+def _softmax(x: np.ndarray) -> np.ndarray:
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def accept_speculative(rows: np.ndarray, draft: Sequence[int],
+                       draft_q: Optional[np.ndarray], *, sample: str,
+                       temperature: float, key: jax.Array, seq_id: int,
+                       start_index: int) -> Tuple[int, List[int]]:
+    """Exact draft verification. Returns (n_accepted, emitted_tokens).
+
+    ``rows``: (len(draft)+1, V) f32 target logits — row i scores the token
+    after position i of the panel [last_sampled, d_1, …, d_γ]. ``draft_q``:
+    (len(draft), V) draft distributions, or None for a deterministic
+    drafter (one-hot). ``start_index``: how many tokens the request had
+    emitted before this step — randomness is folded per
+    (seq_id, emitted-token index), so an emitted position draws the same
+    stream no matter how many drafts preceded it.
+
+    * greedy — accept while the draft matches the target argmax; the first
+      mismatch emits the target argmax instead; full acceptance emits the
+      bonus argmax of the last row. The emitted stream is exactly
+      non-speculative greedy decoding.
+    * temperature — accept d_i w.p. min(1, p_i(d_i)/q_i(d_i)); on first
+      rejection sample the residual norm(max(p−q, 0)); on full acceptance
+      sample the bonus row. Each emitted token is marginally distributed as
+      softmax(row/T) — the target distribution — for any draft proposal.
+    """
+    emitted: List[int] = []
+    if sample == "greedy":
+        for i, d in enumerate(draft):
+            t = int(rows[i].argmax())
+            if t != int(d):
+                emitted.append(t)
+                return i, emitted
+            emitted.append(t)
+        emitted.append(int(rows[len(draft)].argmax()))
+        return len(draft), emitted
+
+    def pos_key(i: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.fold_in(key, seq_id),
+                                  start_index + i)
+
+    for i, d in enumerate(draft):
+        d = int(d)
+        p = _softmax(rows[i] / temperature)
+        if draft_q is None:
+            q_d = 1.0                    # deterministic drafter: one-hot q
+            q = np.zeros_like(p)
+            q[d] = 1.0
+        else:
+            q = draft_q[i]
+            q_d = float(q[d])
+        u = float(jax.random.uniform(jax.random.fold_in(pos_key(i), 0)))
+        if q_d > 0 and u < float(p[d]) / q_d:
+            emitted.append(d)
+            continue
+        residual = np.maximum(p - q, 0.0)
+        z = residual.sum()
+        r = residual / z if z > 0 else p     # q ⊇ p: degenerate, resample p
+        t = int(jax.random.categorical(
+            jax.random.fold_in(pos_key(i), 1),
+            jnp.asarray(np.log(np.maximum(r, 1e-30)))))
+        emitted.append(t)
+        return i, emitted
+    g = len(draft)
+    p = _softmax(rows[g] / temperature)
+    t = int(jax.random.categorical(
+        jax.random.fold_in(pos_key(g), 1),
+        jnp.asarray(np.log(np.maximum(p, 1e-30)))))
+    emitted.append(t)
+    return g, emitted

@@ -66,26 +66,37 @@ def _pool(num_pages=8, n_layers=1):
                     num_pages=num_pages, page_size=PS, quantized=True)
 
 
-def test_paged_matches_dense_equivalence():
-    """Pool ingest and a dense int8 slab quantize identically per page."""
+def test_paged_ingest_is_exact_per_token_quantization():
+    """Pool ingest stores exactly quantize(token, amax(token)/127) per
+    (page, head, token) row — a pure function of each token's own values —
+    and tracks the dense per-page slab within one quantization step."""
     s = 2 * PS + 5
     k = _rand(4, 1, KV, s, HD)
     v = _rand(5, 1, KV, s, HD)
-    dense = DenseKVCache.init(1, KV, s, HD, jnp.float32, quantized=True,
-                              page_size=PS).write_prefill(k, v)
     pool = _pool()
     pool.reserve(0, s)
     pool.ingest(0, 0, k, v)
-    k_dense, _ = dense.read(jnp.float32)            # (1, T, KV, hd)
     tables, lengths = pool.batch_tables([0])
     gathered = jnp.take(pool.k_pages[0], tables[0], axis=0)   # (np,KV,ps,hd)
-    sc = jnp.take(pool.k_scale[0], tables[0], axis=0)
-    k_paged = (gathered.astype(jnp.float32) * sc[..., None, None])
+    sc = jnp.take(pool.k_scale[0], tables[0], axis=0)         # (np,KV,ps)
+    k_paged = (gathered.astype(jnp.float32) * sc[..., None])
     k_paged = jnp.swapaxes(k_paged, 0, 1).reshape(1, KV, -1, HD)
     k_paged = jnp.swapaxes(k_paged, 1, 2)           # (1, T, KV, hd)
-    np.testing.assert_array_equal(np.asarray(k_dense)[0, :s],
-                                  np.asarray(k_paged)[0, :s])
+    # exact write-once reference: each token quantized alone
+    want_sc = int8_scale(k, axes=(3,))                        # (1, KV, s)
+    want = quantize_int8(k, want_sc[..., None]).astype(jnp.float32) \
+        * want_sc[..., None]
+    np.testing.assert_array_equal(
+        np.asarray(jnp.swapaxes(want, 1, 2))[0],
+        np.asarray(k_paged)[0, :s])
     assert int(lengths[0]) == s
+    # and the dense per-page slab agrees within its own (coarser) step
+    dense = DenseKVCache.init(1, KV, s, HD, jnp.float32, quantized=True,
+                              page_size=PS).write_prefill(k, v)
+    k_dense, _ = dense.read(jnp.float32)            # (1, T, KV, hd)
+    tol = 1.1 * float(jnp.max(jnp.abs(k))) / 127
+    np.testing.assert_allclose(np.asarray(k_dense)[0, :s],
+                               np.asarray(k_paged)[0, :s], atol=tol)
 
 
 def test_pool_eviction_and_refill():
@@ -113,7 +124,7 @@ def test_pool_eviction_and_refill():
     cache = cache.append(knew, knew)
     slot = int(tables[0, s // PS])
     page = np.asarray(cache.k_pages[slot], np.float32) * \
-        np.asarray(cache.k_scale[slot])[:, None, None]
+        np.asarray(cache.k_scale[slot])[:, :, None]
     off = s % PS
     expect = np.asarray(k)[0, :, PS:s]               # page-1 prefix
     assert np.abs(page[:, :off] - expect).max() < 2e-2

@@ -1,10 +1,14 @@
-"""PagePool allocator invariants under refcount/COW semantics.
+"""PagePool allocator invariants under refcount/COW/rollback semantics.
 
-Random reserve / fork / release / ensure_writable / ingest traces must
-never leak a page, never double-free one, and never let a shared page be
-written through any block table. The trace driver is deterministic given a
-seed; when ``hypothesis`` is installed (CI) it also explores adversarial
-traces, and without it the seed sweep still covers thousands of ops.
+Random reserve / fork / release / ensure_writable / ingest / truncate
+traces must never leak a page, never double-free one, and never let a
+shared page be written through any block table — and a token-granular
+``truncate`` (the speculative-decoding rollback) must keep the refcount,
+trie and LRU-retention invariants intact whether it merely rewinds the
+partial tail page or also trims whole pages off the table. The trace
+driver is deterministic given a seed; when ``hypothesis`` is installed
+(CI) it also explores adversarial traces, and without it the seed sweep
+still covers thousands of ops.
 """
 import random
 
@@ -36,7 +40,7 @@ def _apply_op(pool: PagePool, rng: random.Random, next_id: list,
     """One random allocator op; raises only for modeled-invalid requests."""
     resident = sorted(pool.tables)
     op = rng.choice(("reserve", "reserve", "fork", "release", "write",
-                     "ingest"))
+                     "ingest", "truncate"))
     if op == "reserve":
         n_tokens = rng.randint(1, 3 * PS)
         prompt = [rng.randrange(VOCAB) for _ in range(n_tokens)]
@@ -75,6 +79,17 @@ def _apply_op(pool: PagePool, rng: random.Random, next_id: list,
         holders = [s for s, t in pool.tables.items() if slot in t]
         assert holders == [sid]
         writers.setdefault(slot, set()).add(sid)
+    elif op == "truncate" and resident:
+        sid = rng.choice(resident)
+        n = rng.randint(0, pool.lens[sid])
+        trim = rng.random() < 0.5
+        before = list(pool.tables[sid])
+        pool.truncate(sid, n, drop_unused_pages=trim)
+        assert pool.lens[sid] == n
+        keep = pool.pages_for(n) if trim else len(before)
+        assert pool.tables[sid] == before[:keep]
+        for slot in before[keep:]:
+            writers.pop(slot, None)    # dropped slots may be recycled
     elif op == "ingest" and resident:
         sid = rng.choice(resident)
         n_pages = len(pool.tables[sid])
@@ -216,6 +231,82 @@ def test_retention_evicts_lru_under_pressure():
     assert pool.tables[11][0] == old_slot
     assert new_slot in pool._retained
     pool.check_invariants()
+
+
+def test_truncate_rewind_and_trim_invariants():
+    """Token-granular truncate rewinds the partial tail page as pure
+    metadata; drop_unused_pages frees whole suffix pages back to the pool
+    with refcount/trie/retention rules intact."""
+    pool = _pool()
+    s = 3 * PS + 2                                 # 4 pages, partial tail
+    pool.reserve(0, s)
+    pool.ingest(0, 0, jnp.ones((1, KV, s, HD)), jnp.ones((1, KV, s, HD)))
+    table = list(pool.tables[0])
+    # mid-page rewind (the speculative rollback): metadata only
+    pool.truncate(0, 2 * PS + 1)
+    assert pool.lens[0] == 2 * PS + 1
+    assert pool.tables[0] == table                 # reservation kept
+    pool.check_invariants()
+    # and with page trimming: the suffix pages return to the free list
+    free_before = pool.num_free
+    pool.truncate(0, PS + 1, drop_unused_pages=True)
+    assert pool.tables[0] == table[:2]             # ceil((PS+1)/PS) pages
+    assert pool.num_free == free_before + 2
+    pool.check_invariants()
+    with pytest.raises(ValueError):
+        pool.truncate(0, PS + 2)                   # can't truncate forward
+    pool.release(0)
+    pool.check_invariants()
+    assert pool.num_free == pool.num_pages
+
+
+def test_truncate_trim_respects_sharing_and_retention():
+    """Trimmed slots follow release semantics: shared slots survive under
+    their other holders; trie-indexed slots park in the retained LRU."""
+    pool = _pool()
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9]           # two full pages + 1
+    pool.reserve(0, len(prompt) + PS, prompt=prompt)
+    pool.lens[0] = len(prompt)                     # as if prefilled
+    pool.register_prefix(0, prompt)
+    pool.fork(0, 1)
+    shared = list(pool.tables[0])
+    # child rolls back past the shared suffix: parent's refs keep the slots
+    pool.truncate(1, PS, drop_unused_pages=True)
+    assert pool.tables[1] == shared[:1]
+    assert all(pool.ref[s] >= 1 for s in shared)
+    pool.check_invariants()
+    pool.release(1)
+    # parent rolls back past its own trie-registered page: the slot's last
+    # reference dies -> retained (trie intact), not freed
+    pool.truncate(0, PS, drop_unused_pages=True)
+    assert pool.ref[shared[1]] == 0
+    assert shared[1] in pool._retained
+    assert pool.match_prefix(prompt)[0] == 2 * PS  # still shareable
+    pool.check_invariants()
+    pool.release(0)
+    pool.check_invariants()
+
+
+def test_rollback_then_write_crosses_cow():
+    """After a rollback into a COW-shared page, the next write through
+    ensure_writable forks the page instead of mutating the sharer's copy."""
+    pool = _pool()
+    k = jnp.asarray(np.random.default_rng(1).standard_normal((1, KV, PS, HD)),
+                    jnp.float32)
+    pool.reserve(0, 2 * PS)
+    pool.ingest(0, 0, k, k)
+    pool.fork(0, 1)
+    slot = pool.tables[1][0]
+    before = np.asarray(pool.k_pages[0][slot])
+    pool.truncate(1, PS // 2)                      # rewind INTO a shared page
+    assert pool.tables[1][0] == slot               # still shared after rewind
+    new = pool.ensure_writable(1, 0)               # …until the next write
+    assert new != slot and pool.ref[slot] == 1 and pool.ref[new] == 1
+    np.testing.assert_array_equal(np.asarray(pool.k_pages[0][slot]), before)
+    pool.check_invariants()
+    pool.release(0)
+    pool.release(1)
+    assert pool.num_free == pool.num_pages
 
 
 def test_match_prefix_capped_before_last_token():

@@ -17,8 +17,10 @@ def _paged_int8(b, kv, ps, hd, num_pages, max_pages):
                      jnp.int8)
     vp = jnp.asarray(RNG.integers(-127, 128, (num_pages, kv, ps, hd)),
                      jnp.int8)
-    ks = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv)), jnp.float32)
-    vs = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv)), jnp.float32)
+    ks = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv, ps)),
+                     jnp.float32)
+    vs = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv, ps)),
+                     jnp.float32)
     tables = jnp.asarray(
         RNG.permutation(num_pages)[:b * max_pages].reshape(b, max_pages),
         jnp.int32)
@@ -54,7 +56,7 @@ def test_kernel_single_token_length():
     np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
     # softmax over one position ⇒ output is exactly that value row
-    v0 = vp[tables[:, 0]].astype(jnp.float32) * vs[tables[:, 0]][..., None, None]
+    v0 = vp[tables[:, 0]].astype(jnp.float32) * vs[tables[:, 0]][..., None]
     np.testing.assert_allclose(np.asarray(ref),
                                np.tile(np.asarray(v0)[:, :, :1], (1, 1, g, 1)),
                                rtol=1e-5, atol=1e-5)

@@ -22,8 +22,10 @@ def _paged_int8(kv, ps, hd, num_pages, max_pages):
                      jnp.int8)
     vp = jnp.asarray(RNG.integers(-127, 128, (num_pages, kv, ps, hd)),
                      jnp.int8)
-    ks = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv)), jnp.float32)
-    vs = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv)), jnp.float32)
+    ks = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv, ps)),
+                     jnp.float32)
+    vs = jnp.asarray(RNG.uniform(1e-3, 5e-2, (num_pages, kv, ps)),
+                     jnp.float32)
     table = jnp.asarray(RNG.permutation(num_pages)[:max_pages], jnp.int32)
     return kp, vp, ks, vs, table
 

@@ -120,6 +120,6 @@ def test_tp_parity_subprocess():
     res = subprocess.run([sys.executable, script], capture_output=True,
                          text=True, timeout=520, env=env)
     for marker in ("PREFILL_OK", "DECODE_OK", "ENGINE_OK", "INDIV_OK",
-                   "QUANT_OK", "TP_PARITY_OK"):
+                   "QUANT_OK", "SPEC_OK", "TP_PARITY_OK"):
         assert marker in res.stdout, \
             (marker, res.stdout[-1000:], res.stderr[-3000:])

@@ -20,6 +20,12 @@ pytest session, hence the subprocess. Checks, in order:
   single-device fused CAMP result, ``quantized_psum`` is exact to one
   shared quantization step, and a w8a8 engine with ``tp_int8_reduce`` keeps
   majority token agreement with its single-device run.
+* SPEC_OK    — speculative decoding under the mesh: the γ+1-token verify
+  panels run through the head-sharded ``paged_prefill_attention_tp`` path
+  (drafting stays replicated), greedy token streams and draft/accept stats
+  are identical to both the sharded non-speculative engine and the
+  single-device speculative engine, and rollback leaves the replicated
+  page accounting bit-for-bit equal.
 """
 import os
 
@@ -255,10 +261,42 @@ def check_quantized():
     print("QUANT_OK")
 
 
+def check_spec():
+    from repro.serving.spec_decode import SpecConfig
+
+    key = jax.random.PRNGKey(4)
+    pattern = jax.random.randint(key, (6,), 0, CFG.vocab_size)
+    prompts = [jnp.tile(pattern, 5),                 # repetitive: drafts land
+               jax.random.randint(jax.random.fold_in(key, 1), (13,), 0,
+                                  CFG.vocab_size)]   # random: drafts miss
+
+    def run(mesh, spec):
+        eng = ContinuousBatchingEngine(PARAMS, CFG, kv_dtype="int8",
+                                       page_size=PS, capacity_tokens=512,
+                                       mesh=mesh, spec=spec)
+        sids = [eng.submit(p, 10) for p in prompts]
+        outs = eng.run()
+        return [outs[s] for s in sids], engine_state(eng), eng
+
+    spec = lambda: SpecConfig(method="ngram", gamma=3)  # noqa: E731
+    base, base_end, _ = run(None, None)
+    ref, ref_end, ref_eng = run(None, spec())
+    got, got_end, eng = run(MESH, spec())
+    assert eng.tp == TP and eng.pool.sharded
+    assert ref == base, "single-device spec diverged from plain decode"
+    assert got == ref, f"sharded spec tokens diverged: {ref} vs {got}"
+    assert got_end == ref_end == base_end, "page accounting diverged"
+    r, g = ref_eng.spec_summary(), eng.spec_summary()
+    assert r == g, f"spec stats diverged: {r} vs {g}"
+    assert g["proposed"] > 0 and g["accepted"] > 0, "speculation inactive"
+    print("SPEC_OK")
+
+
 if __name__ == "__main__":
     assert len(jax.devices()) >= 8, "needs 8 virtual devices (XLA_FLAGS)"
     check_prefill_decode()
     check_engine()
     check_indivisible()
     check_quantized()
+    check_spec()
     print("TP_PARITY_OK")
